@@ -1,0 +1,112 @@
+"""Shared benchmark harness: trained model loading, PPL eval, timing.
+
+All quality benchmarks quantize the CPU-trained ~30M ``bench_lm`` (see
+examples/quickstart.py / launch.train) and evaluate perplexity on held-out
+synthetic batches. Absolute numbers differ from the paper's LLaMA-2 (no
+weights offline); the *relative* claims are what each table validates.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.paper_llama import bench_lm
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.models.registry import ModelApi, get_model
+from repro.nn import spec as S
+from repro.training.optimizer import state_specs
+from repro.training.train_step import cross_entropy
+
+CKPT_DIR = os.environ.get("BENCH_CKPT", "results/bench_lm_ckpt")
+_STATE: dict = {}
+
+
+def load_bench_model():
+    """(api, cfg, fp_params) — trained if a checkpoint exists, else a
+    deterministic random init (benchmarks still run, clearly labeled)."""
+    if "model" in _STATE:
+        return _STATE["model"]
+    cfg = bench_lm()
+    api = get_model(cfg)
+    pspecs = api.param_specs(cfg, None)
+    mgr = CheckpointManager(CKPT_DIR)
+    step = mgr.latest_step() if os.path.isdir(CKPT_DIR) else None
+    if step:
+        tmpl = {"params": S.abstract(pspecs),
+                "opt": S.abstract(state_specs(pspecs))}
+        state, _ = mgr.restore(step, tmpl)
+        params = state["params"]
+        trained = True
+    else:
+        params = S.materialize(pspecs, jax.random.PRNGKey(7))
+        trained = False
+    _STATE["model"] = (api, cfg, params, trained)
+    return _STATE["model"]
+
+
+def data_cfg() -> DataConfig:
+    cfg = bench_lm()
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=128, batch_size=8)
+
+
+def calib_batches(n: int = 2) -> list[dict]:
+    pipe = SyntheticPipeline(data_cfg())
+    return [pipe.global_batch(50_000 + i) for i in range(n)]
+
+
+def eval_batches(n: int = 4) -> list[dict]:
+    """Held-out region of the deterministic stream (never trained on)."""
+    pipe = SyntheticPipeline(data_cfg())
+    return [pipe.global_batch(100_000 + i) for i in range(n)]
+
+
+def perplexity(api: ModelApi, cfg, params, recipe=None,
+               batches: list[dict] | None = None) -> float:
+    batches = batches or eval_batches()
+
+    @jax.jit
+    def ce(params, tokens, labels):
+        logits, _, _ = api.apply(params, cfg, tokens, recipe=recipe,
+                                 mode="train")
+        return cross_entropy(logits, labels)
+
+    tot = 0.0
+    for b in batches:
+        tot += float(ce(params, jnp.asarray(b["tokens"]),
+                        jnp.asarray(b["labels"])))
+    return float(np.exp(tot / len(batches)))
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Returns (result, best_us)."""
+    r = None
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        best = min(best, time.perf_counter() - t0)
+    return r, best * 1e6
+
+
+class Report:
+    """Collects `name,us_per_call,derived` rows (benchmarks.run contract)."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    def dump(self) -> str:
+        return "\n".join(f"{n},{u:.1f},{d}" for n, u, d in self.rows)

@@ -1,0 +1,267 @@
+"""Analytic per-cell cost model: FLOPs, HBM bytes, collective bytes.
+
+WHY THIS EXISTS (see EXPERIMENTS.md §Roofline methodology): XLA's
+``compiled.cost_analysis()`` counts a ``while`` loop body ONCE — scanned
+layer stacks (x88 for granite), chunked flash attention and xLSTM's
+time-scan are under-counted by their trip counts, so raw HLO FLOPs are
+unusable as the compute-roofline numerator. We therefore derive the three
+terms analytically from the model/sharding definitions (the standard
+production-roofline practice), and cross-validate against trip-count-
+corrected HLO on shallow-loop cells (benchmarks/hlo_validation.py).
+
+All quantities are GLOBAL; the roofline divides by chips. Conventions:
+  * matmul M,K,N -> 2MKN FLOPs
+  * train = 3x forward (+1x forward when remat) for parameter FLOPs
+  * causal attention scores+AV: 4*B*S^2*Hq*hd FLOPs per layer, halved for
+    causality; windowed: S*W instead of S^2
+  * serving weights are W4A8 (packed int4 + int32 scales ~ 0.56 B/param);
+    training weights bf16, optimizer f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.models.config import ModelConfig
+from repro.models.registry import get_arch
+from repro.models.transformer import layer_kinds as tf_kinds
+from repro.models import xlstm as X
+from repro.models import griffin as G
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float           # global FLOPs for one step (sharded evenly)
+    hbm_bytes: float       # PER-CHIP HBM traffic
+    coll_bytes: float      # PER-CHIP wire bytes
+    ideal_flops: float = 0.0   # speed-of-light: MODEL_FLOPS
+    ideal_hbm: float = 0.0     # speed-of-light per-chip bytes
+    notes: str = ""
+
+
+W4_BYTES = 0.5 + 4.0 / 128  # packed int4 + int32 group scale per weight
+BF16 = 2
+F32 = 4
+
+
+def _attn_flops(cfg: ModelConfig, B, Sq, Skv, causal=True, window=None):
+    hd = cfg.head_dim
+    eff = min(window, Skv) if window else Skv
+    f = 4.0 * B * Sq * eff * cfg.num_heads * hd
+    if causal and window is None and Sq == Skv:
+        f *= 0.5
+    return f
+
+
+def _linear_weights(cfg: ModelConfig) -> dict[str, float]:
+    """Per-layer linear params by kind (for flops = 2*T*params)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    out = {}
+    if cfg.attention == "mla":
+        r, nd_, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+        qin = cfg.q_lora_rank or d
+        attn = (d * cfg.q_lora_rank if cfg.q_lora_rank else 0) \
+            + qin * H * (nd_ + r) + d * (cfg.kv_lora_rank + r) \
+            + cfg.kv_lora_rank * H * (nd_ + vd) + H * vd * d
+    else:
+        attn = d * H * hd * 2 + d * Hkv * hd * 2
+    out["attn"] = attn
+    out["mlp"] = 3 * d * cfg.d_ff
+    if cfg.num_experts:
+        out["moe_active"] = 3 * d * cfg.moe_d_ff * (
+            cfg.top_k + cfg.num_shared_experts)
+        out["moe_total"] = 3 * d * cfg.moe_d_ff * (
+            cfg.num_experts + cfg.num_shared_experts)
+    out["xattn"] = d * H * hd * 2 + d * Hkv * hd * 2
+    return out
+
+
+def _layer_list(cfg: ModelConfig) -> list[str]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tf_kinds(cfg)
+    if cfg.family == "ssm":
+        return X.layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        return G.layer_kinds(cfg)
+    return ["encdec"]
+
+
+def _param_bytes_serving(cfg: ModelConfig) -> float:
+    """Quantized weight bytes (all linears int4-packed; embeds bf16)."""
+    n_lin = cfg.param_count_estimate() - 2 * cfg.vocab_size * cfg.d_model
+    return n_lin * W4_BYTES + 2 * cfg.vocab_size * cfg.d_model * BF16
+
+
+def _kv_bytes_per_token_layer(cfg: ModelConfig, kind: str) -> float:
+    if cfg.attention == "mla":
+        return (cfg.kv_lora_rank + cfg.qk_rope_dim) * BF16
+    b = 1 if cfg.kv_cache_dtype == "int8" else BF16
+    return 2 * cfg.num_kv_heads * cfg.head_dim * b
+
+
+# ---------------------------------------------------------------------------
+# Per-mode costs
+# ---------------------------------------------------------------------------
+
+
+def _mesh(multi_pod=False):
+    return {"data": 32 if multi_pod else 16, "model": 16,
+            "chips": 512 if multi_pod else 256}
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, decode_ctx=None):
+    """Forward FLOPs; decode_ctx = context length for one-token decode."""
+    lw = _linear_weights(cfg)
+    kinds = _layer_list(cfg)
+    T = B * S
+    f = 0.0
+    d = cfg.d_model
+    for kind in kinds:
+        if cfg.family == "ssm":
+            di = int(d * cfg.mlstm_proj_factor)
+            dh = di // cfg.num_heads
+            if kind == "mlstm":
+                lin = d * 2 * di + 3 * di * di + di * d
+                cell = 8 * cfg.num_heads * dh * dh  # C update + read
+                f += 2 * T * lin + T * cell
+            else:
+                dh2 = d // cfg.num_heads
+                ff = -(-int(d * 4 / 3) // 128) * 128
+                lin = d * 4 * d + 3 * d * ff
+                rec = 2 * cfg.num_heads * dh2 * 4 * dh2
+                f += 2 * T * lin + T * rec
+            continue
+        if cfg.family == "hybrid":
+            ff = 3 * d * cfg.d_ff
+            if kind == "rec":
+                lin = 3 * d * d + 2 * d * d  # gate,x,out + lru wa/wi
+                f += 2 * T * (lin + ff) + 10 * T * d  # scan ops
+            else:
+                f += 2 * T * (lw["attn"] + ff)
+                f += _attn_flops(cfg, B, S, decode_ctx or S,
+                                 window=cfg.window)
+            continue
+        if cfg.family == "audio":
+            ne = cfg.num_encoder_layers or cfg.num_layers
+            enc_T = B * cfg.encoder_seq
+            per_enc = 4 * d * d + 2 * d * cfg.d_ff
+            per_dec = 8 * d * d + 2 * d * cfg.d_ff
+            f += 2 * enc_T * per_enc * ne if decode_ctx is None else 0.0
+            f += 2 * T * per_dec * cfg.num_layers
+            f += ne * _attn_flops(cfg, B, cfg.encoder_seq, cfg.encoder_seq,
+                                  causal=False) if decode_ctx is None else 0
+            f += cfg.num_layers * (
+                _attn_flops(cfg, B, S, decode_ctx or S)
+                + _attn_flops(cfg, B, S, cfg.encoder_seq, causal=False))
+            break  # kinds handled wholesale
+        # transformer families
+        if kind == "cross":
+            f += 2 * T * (lw["xattn"] + lw["mlp"])
+            f += _attn_flops(cfg, B, S, cfg.num_image_tokens, causal=False)
+        elif kind == "moe":
+            f += 2 * T * (lw["attn"] + lw["moe_active"])
+            f += _attn_flops(cfg, B, S, decode_ctx or S)
+        else:
+            f += 2 * T * (lw["attn"] + lw["mlp"])
+            f += _attn_flops(cfg, B, S, decode_ctx or S)
+    # embeddings + head
+    f += 2 * T * cfg.d_model * cfg.vocab_size  # logits (train: all pos)
+    return f
+
+
+def cell_cost(arch: str, shape_name: str, multi_pod=False) -> CellCost:
+    cfg = get_arch(arch)
+    shp = SHAPES[shape_name]
+    m = _mesh(multi_pod)
+    B, S = shp.batch, shp.seq
+    kinds = _layer_list(cfg)
+    L = len(kinds) if kinds != ["encdec"] else (
+        cfg.num_layers + (cfg.num_encoder_layers or cfg.num_layers))
+    n_params = cfg.param_count_estimate()
+    n_active = cfg.active_param_count()
+    d = cfg.d_model
+
+    chips = m["chips"]
+    if shp.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        mult = 3 + (1 if cfg.remat else 0)
+        flops = mult * fwd
+        # per-chip HBM: FSDP-gathered params land in HBM and are read per
+        # pass (fwd+bwd+remat) on EVERY chip's TP shard (params/nm); grads
+        # f32 + AdamW moments on the 1/chips shard; activations batch-
+        # sharded, ~14*T*d*2B per layer each way.
+        nd_, nm = m["data"], m["model"]
+        hbm = (3 * (n_params / nm) * BF16            # gathered param reads
+               + (n_params / chips) * F32 * 4        # grads + opt updates
+               + 14 * (B * S / nd_) * d * BF16 * L)  # activations
+        # per-chip collectives: FSDP AG (fwd+bwd+remat) + grad RS over
+        # data; TP ARs on activations (2 fwd + 2 bwd per layer)
+        shard_bytes = n_params / chips
+        ag = 3 * shard_bytes * BF16 * (nd_ - 1)  # receive full params 3x
+        rs = shard_bytes * F32 * (nd_ - 1)
+        t_loc = B * S / nd_
+        ar = 4 * L * 2 * (t_loc * d * BF16) * (nm - 1) / nm
+        coll = ag + rs + ar
+        if cfg.num_experts:
+            cap = 1.25 * cfg.top_k
+            coll += 2 * L * (t_loc * d * BF16 * cap)  # a2a there+back
+        ideal_hbm = ((n_params * BF16 + n_params * F32 * 4) / chips
+                     + 4 * (B * S / chips) * d * BF16 * L)
+        return CellCost(flops, hbm, coll,
+                        ideal_flops=6.0 * n_active * B * S,
+                        ideal_hbm=ideal_hbm,
+                        notes="train: FSDP+TP analytic")
+
+    if shp.kind == "prefill":
+        flops = forward_flops(cfg, B, S) \
+            - 2 * B * (S - 1) * d * cfg.vocab_size  # last-token logits only
+        wbytes = _param_bytes_serving(cfg)
+        kv = sum(_kv_bytes_per_token_layer(cfg, k) for k in kinds) * B * S
+        nd_, nm = m["data"], m["model"]
+        # weights replicated across data rows: each chip reads its TP shard
+        hbm = (wbytes / nm + 12 * (B * S / nd_ / nm) * d * BF16 * L
+               + kv / chips)
+        t_loc = B * S / nd_
+        coll = 2 * L * (t_loc * d * BF16) * (nm - 1) / nm  # TP ARs
+        ideal_hbm = (wbytes + kv) / chips \
+            + 4 * (B * S / chips) * d * BF16 * L
+        return CellCost(flops, hbm, coll,
+                        ideal_flops=2.0 * n_active * B * S,
+                        ideal_hbm=ideal_hbm, notes="prefill: TP analytic")
+
+    # decode: one token, context S
+    flops = forward_flops(cfg, B, 1, decode_ctx=S) \
+        + 2 * B * d * cfg.vocab_size
+    wbytes = _param_bytes_serving(cfg)
+    if cfg.family == "ssm":
+        state = sum(
+            (cfg.num_heads * ((int(d * cfg.mlstm_proj_factor)
+                               // cfg.num_heads) ** 2) * F32)
+            if k == "mlstm" else (4 * d * F32)
+            for k in kinds) * B
+        kv_read = state * 2  # read+write recurrent state
+    elif cfg.family == "hybrid":
+        kv_read = sum(
+            (d * F32 * 2) if k == "rec" else
+            (min(cfg.window, S) * 2 * cfg.num_kv_heads * cfg.head_dim * BF16)
+            for k in kinds) * B
+    else:
+        kv_read = sum(_kv_bytes_per_token_layer(cfg, k) for k in kinds) \
+            * B * S
+        if cfg.family == "audio":
+            kv_read += cfg.num_layers * B * cfg.encoder_seq * 2 \
+                * cfg.num_heads * cfg.head_dim * BF16
+    nd_, nm = m["data"], m["model"]
+    # weights replicated across data rows: each chip reads wbytes/nm;
+    # KV/state sharded over (data x model) -> /chips
+    hbm = wbytes / nm + kv_read / chips
+    # decode collectives: TP all-reduce of (B_loc, d) twice per layer +
+    # seq-sharded attention partial-softmax reduce (small)
+    b_loc = max(B / nd_, 1)
+    coll = 2 * L * b_loc * d * BF16 * (nm - 1) / nm
+    ideal_hbm = (wbytes + kv_read) / chips  # fully weight-sharded decode
+    return CellCost(flops, hbm, coll,
+                    ideal_flops=2.0 * n_active * B,
+                    ideal_hbm=ideal_hbm,
+                    notes="decode: TP + seq-sharded KV analytic")

@@ -1,0 +1,42 @@
+"""Paper §5.5: Integer Scale through Mixture-of-Experts.
+
+The paper's Mixtral result: fine-grained W4A8 + IS quantizes MoE models
+that are otherwise hard at low bits. Here: the phi3.5-moe smoke config
+(same family: 16->4 experts top-2) with random-trained weights; claim
+validated structurally: expert-parallel quantized GEMMs run end-to-end
+and IS-vs-FS output deltas stay small relative to FP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ptq
+from repro.core.recipe import QuantRecipe, QuantSpec
+from repro.models.registry import get_arch, get_model
+from repro.nn import spec as S
+
+from .common import Report
+
+
+def run(report: Report, fast: bool = False) -> None:
+    cfg = get_arch("phi3.5-moe-42b-a6.6b", smoke=True)
+    api = get_model(cfg)
+    params = S.materialize(api.param_specs(cfg, None), jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (4, 64), 0,
+                              cfg.vocab_size)
+    logits_fp, _, _ = api.apply(params, cfg, toks, mode="train")
+
+    outs = {}
+    for name, mode in (("float", "float"), ("integer", "integer")):
+        spec = QuantSpec(scale_mode=mode)
+        recipe = QuantRecipe(rules=(("*", spec),), name=f"moe-{name}")
+        qp = ptq.post_training_quantize(api, cfg, params, recipe, None)
+        logits, _, _ = api.apply(qp, cfg, toks, recipe=recipe, mode="train")
+        rel = float(jnp.linalg.norm(logits - logits_fp)
+                    / jnp.linalg.norm(logits_fp))
+        outs[name] = (logits, rel)
+        report.add(f"moe/w4a8-{name}-scale-vs-fp", 0.0, f"relerr={rel:.4f}")
+    d = float(jnp.linalg.norm(outs["integer"][0] - outs["float"][0])
+              / jnp.linalg.norm(outs["float"][0]))
+    report.add("moe/is-vs-fs", 0.0, f"relerr={d:.4f}")

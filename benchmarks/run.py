@@ -1,0 +1,66 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
+Quality tables quantize the CPU-trained bench LM (results/bench_lm_ckpt,
+produced by examples/quickstart.py); kernel/roofline rows are derived
+from v5e constants + the dry-run artifacts, labeled as such.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import Report
+
+
+MODULES = [
+    "table1_fg_vs_coarse",
+    "table3_is_vs_fs",
+    "table5_recipe",
+    "table6_marlin",
+    "table7_amplifier",
+    "kernel_latency",
+    "overflow_audit",
+    "moe_e2e",
+    "roofline",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer eval/calib batches")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+
+    mods = MODULES
+    if args.only:
+        want = set(args.only.split(","))
+        mods = [m for m in MODULES if m in want or m.split("_")[0] in want]
+
+    print("name,us_per_call,derived")
+    report = Report()
+    t0 = time.time()
+    failures = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t1 = time.time()
+        try:
+            mod.run(report, fast=args.fast)
+        except Exception as e:  # noqa: BLE001 — record, keep sweeping
+            failures.append((name, repr(e)))
+            report.add(f"{name}/ERROR", 0.0, repr(e)[:120])
+        print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s, {len(report.rows)} rows",
+          file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

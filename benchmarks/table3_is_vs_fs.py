@@ -1,0 +1,67 @@
+"""Paper Tables 3/4/8: Integer Scale vs Float Scale accuracy deltas.
+
+{GPTQ, AWQ, Omniquant} x {float scale, integer scale (alpha=1024)} at
+fine-grained W4A8, plus the FP baseline. Validated claim: |delta PPL|
+between IS and FS is small (paper: <= ~0.1), i.e. the speedup is a free
+lunch. Also reports a greedy-decode agreement rate (Table 4 analog: a
+downstream behavioral metric rather than PPL).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ptq
+from repro.core.recipe import QuantRecipe, QuantSpec
+
+from .common import Report, calib_batches, eval_batches, load_bench_model, \
+    perplexity
+
+METHODS = [
+    ("gptq", QuantSpec(algo="gptq")),
+    ("awq", QuantSpec(algo="awq")),
+    ("omniquant", QuantSpec(algo="omniquant")),
+]
+
+
+def greedy_agreement(api, cfg, params_a, recipe_a, params_b, recipe_b,
+                     batch) -> float:
+    """Fraction of positions where two models pick the same argmax token."""
+
+    def preds(p, r):
+        logits, _, _ = api.apply(p, cfg, jnp.asarray(batch["tokens"]),
+                                 recipe=r, mode="train")
+        return jnp.argmax(logits, -1)
+
+    a = preds(params_a, recipe_a)
+    b = preds(params_b, recipe_b)
+    return float(jnp.mean((a == b).astype(jnp.float32)))
+
+
+def run(report: Report, fast: bool = False) -> None:
+    api, cfg, params, trained = load_bench_model()
+    ev = eval_batches(2 if fast else 4)
+    cal = calib_batches(1 if fast else 2)
+    base_ppl = perplexity(api, cfg, params, batches=ev)
+    report.add("table3/fp16-baseline", 0.0, f"ppl={base_ppl:.3f}")
+
+    for name, spec in METHODS:
+        fs = dataclasses.replace(spec, scale_mode="float")
+        r_fs = QuantRecipe(rules=(("*", fs),), name=f"{name}-fs")
+        qp_fs = ptq.post_training_quantize(api, cfg, params, r_fs, cal)
+        ppl_fs = perplexity(api, cfg, qp_fs, recipe=r_fs, batches=ev)
+
+        is_ = dataclasses.replace(spec, scale_mode="integer",
+                                  amplifier=1024)
+        r_is = QuantRecipe(rules=(("*", is_),), name=f"{name}-is")
+        qp_is = ptq.post_training_quantize(api, cfg, params, r_is, cal)
+        ppl_is = perplexity(api, cfg, qp_is, recipe=r_is, batches=ev)
+
+        agree = greedy_agreement(api, cfg, qp_fs, r_fs, qp_is, r_is, ev[0])
+        d = ppl_is - ppl_fs
+        report.add(f"table3/{name}/float-scale", 0.0, f"ppl={ppl_fs:.3f}")
+        report.add(f"table3/{name}/integer-scale", 0.0,
+                   f"ppl={ppl_is:.3f};delta={d:+.3f};greedy_agree="
+                   f"{agree:.3f}")

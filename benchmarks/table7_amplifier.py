@@ -1,0 +1,72 @@
+"""Paper Table 7 + Fig. 4: amplifier ablation & scale distribution.
+
+PPL across amplifiers {heuristic, 128, 512, 1024, 4096} at W4A16-FG (the
+paper's Table 7 setting) — validated claims: alpha=128 degrades, >=512
+plateaus, heuristic ~ fixed-1024. Fig. 4 analog: per-layer bit-shift
+histogram + weight MSE between integer- and float-scale dequantization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ptq
+from repro.core.integer_scale import bit_shift_required, \
+    integerization_weight_mse
+from repro.core.quant import quantize_weight
+from repro.core.recipe import QuantRecipe, QuantSpec
+
+from .common import Report, eval_batches, load_bench_model, perplexity
+
+# W4A8 with integer scales at various amplifiers (W4A16+IS is a no-op
+# pipeline-wise: weight-only keeps float scales; the paper's Table 7 runs
+# the scales through the integerization regardless — we use W4A8 so the
+# integer scales are actually exercised end to end).
+AMPLIFIERS = ["heuristic", 128, 512, 1024, 4096]
+
+
+def run(report: Report, fast: bool = False) -> None:
+    api, cfg, params, trained = load_bench_model()
+    ev = eval_batches(2 if fast else 4)
+
+    fs = QuantSpec(scale_mode="float")
+    r_fs = QuantRecipe(rules=(("*", fs),), name="fs")
+    qp = ptq.post_training_quantize(api, cfg, params, r_fs, None)
+    ppl_fs = perplexity(api, cfg, qp, recipe=r_fs, batches=ev)
+    report.add("table7/float-scale-ref", 0.0, f"ppl={ppl_fs:.3f}")
+
+    for amp in AMPLIFIERS:
+        spec = QuantSpec(scale_mode="integer", amplifier=amp)
+        recipe = QuantRecipe(rules=(("*", spec),), name=f"amp-{amp}")
+        qp = ptq.post_training_quantize(api, cfg, params, recipe, None)
+        ppl = perplexity(api, cfg, qp, recipe=recipe, batches=ev)
+        report.add(f"table7/amplifier-{amp}", 0.0,
+                   f"ppl={ppl:.3f};delta_vs_fs={ppl-ppl_fs:+.3f}")
+
+    # -- Fig. 4 (b): bit shifts required per layer ---------------------------
+    shifts = []
+    mses = {a: [] for a in (128, 512, 1024, 4096)}
+
+    def walk(node):
+        if isinstance(node, dict) and "w" in node and not isinstance(
+                node["w"], dict) and getattr(node["w"], "ndim", 0) in (2, 3):
+            ws = node["w"] if node["w"].ndim == 3 else node["w"][None]
+            for wi in np.asarray(ws, np.float32):
+                if wi.shape[0] % 128:
+                    continue
+                qw = quantize_weight(wi, 4, 128)
+                shifts.append(int(bit_shift_required(qw.scale)))
+                for a in mses:
+                    mses[a].append(float(integerization_weight_mse(qw, a)))
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    hist = np.bincount(np.asarray(shifts), minlength=16)[:16]
+    report.add("fig4/bit-shift-histogram", 0.0,
+               "counts=" + "|".join(map(str, hist.tolist())))
+    for a in (128, 512, 1024, 4096):
+        report.add(f"fig4/weight-mse-alpha{a}", 0.0,
+                   f"mse={np.mean(mses[a]):.3e}")

@@ -1,0 +1,38 @@
+"""Paper Listing 1 / Table 7 in miniature: sweep the Integer Scale
+amplifier on one trained weight matrix and print the error trade-off.
+
+    PYTHONPATH=src python examples/amplifier_ablation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import load_bench_model  # noqa: E402
+from repro.core import integer_scale as isc  # noqa: E402
+from repro.core import quant  # noqa: E402
+
+
+def main() -> None:
+    _, cfg, params, trained = load_bench_model()
+    w = np.asarray(params["blocks"]["s0"]["mlp"]["gate"]["w"][0],
+                   np.float32)  # layer-0 gate proj
+    qw = quant.quantize_weight(jnp.asarray(w), 4, 128)
+    n = int(isc.heuristic_amplifier_exp(qw.scale))
+    print(f"weight {w.shape}, trained={trained}")
+    print(f"Listing-1 heuristic: {n} bit shifts -> alpha=2^{n}={2**n}")
+    print(f"{'alpha':>8s} {'weight MSE(IS vs FS)':>22s} "
+          f"{'overflow bound /2^31':>22s}")
+    for a in [2 ** n, 128, 512, 1024, 4096, 16384]:
+        mse = float(isc.integerization_weight_mse(qw, a))
+        isw = isc.integerize(qw, a)
+        frac = isc.overflow_bound(isw) / 2**31
+        tag = " (heuristic)" if a == 2 ** n else ""
+        print(f"{a:8d} {mse:22.3e} {frac:22.4f}{tag}")
+
+
+if __name__ == "__main__":
+    main()

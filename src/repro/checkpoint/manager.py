@@ -1,0 +1,160 @@
+"""Fault-tolerant checkpointing: atomic, async, retained, elastic.
+
+* atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` -> a crash
+  mid-save never corrupts the latest checkpoint.
+* async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes in a background thread — the train loop never blocks on disk.
+* retention: keep the most recent ``keep`` checkpoints.
+* elastic: ``restore`` takes the ParamSpec tree + target shardings, so the
+  same checkpoint restores onto a *different* mesh (re-shard on load) — the
+  restart path after node failure or cluster resize.
+
+Storage: one .npz per checkpoint (flat key -> array). For multi-host
+deployments each host would write its shards (process-local arrays); in
+this single-process container full arrays are written.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy can't serialize natively -> stored as a same-width uint view
+_VIEWED = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template: Any, flat: dict[str, Any], prefix: str = ""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- paths ---------------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append(int(f[5:-4]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ------------------------------------------------------------------
+    def _write(self, step: int, flat_np: dict[str, np.ndarray],
+               meta: dict) -> None:
+        viewed = {}
+        enc = {}
+        for k, v in flat_np.items():
+            name = str(v.dtype)
+            if name in _VIEWED:
+                enc[k] = v.view(_VIEWED[name][1])
+                viewed[k] = name
+            else:
+                enc[k] = v
+        meta = dict(meta or {}, __viewed__=viewed)
+        tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **enc)
+        os.replace(tmp, self._path(step))  # atomic
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def save(self, step: int, tree: Any, meta: dict | None = None) -> None:
+        flat = _flatten(tree)
+        flat_np = {k: np.asarray(v) for k, v in flat.items()}
+        self._write(step, flat_np, meta or {})
+
+    def save_async(self, step: int, tree: Any,
+                   meta: dict | None = None) -> None:
+        """Snapshot to host now, write in the background."""
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(tree)
+        flat_np = {k: np.asarray(v) for k, v in flat.items()}  # device->host
+
+        def run():
+            try:
+                self._write(step, flat_np, meta or {})
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, step: int, template: Any,
+                shardings: Any | None = None) -> tuple[Any, dict]:
+        """template: pytree of arrays or ShapeDtypeStructs (same structure).
+        shardings: optional matching NamedSharding tree -> device_put onto
+        the *current* mesh (elastic re-shard)."""
+        with np.load(self._path(step), allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            viewed = meta.pop("__viewed__", {})
+            flat = {}
+            for k in z.files:
+                if k == "__meta__":
+                    continue
+                a = z[k]
+                if k in viewed:
+                    a = a.view(_VIEWED[viewed[k]][0])
+                flat[k] = a
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(jnp.asarray(a), s),
+                tree, shardings)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return tree, meta

@@ -1,0 +1,19 @@
+"""Architecture configs — one module per assigned arch (+ the paper's own).
+
+Importing this package registers every arch with the model registry, so
+``repro.models.registry.get_arch("<id>")`` / ``--arch <id>`` work.
+"""
+from . import (  # noqa: F401
+    granite_34b,
+    qwen2_72b,
+    minicpm3_4b,
+    llama32_3b,
+    phi35_moe,
+    deepseek_v2,
+    llama32_vision_90b,
+    xlstm_1b3,
+    recurrentgemma_9b,
+    whisper_tiny,
+    paper_llama,
+)
+from .shapes import SHAPES, Shape, input_specs, shape_applicable  # noqa: F401

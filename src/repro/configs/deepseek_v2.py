@@ -1,0 +1,33 @@
+"""deepseek-v2-236b [moe, MLA]: 60L d_model=5120 128H, expert d_ff=1536,
+vocab=102400, MoE 160 routed top-6 + 2 shared, MLA kv_lora=512
+[arXiv:2405.04434]. First layer dense (d_ff 12288 = 8x expert dim)."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_arch
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b", family="moe",
+        num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+        d_ff=12288,  # the dense first layer; experts use moe_d_ff
+        vocab_size=102400,
+        attention="mla", q_lora_rank=1536, kv_lora_rank=512,
+        qk_rope_dim=64, qk_nope_dim=128, v_head_dim=128,
+        num_experts=160, num_shared_experts=2, top_k=6, moe_d_ff=1536,
+        first_dense_layers=1,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-smoke", family="moe",
+        num_layers=3, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=512,
+        attention="mla", q_lora_rank=128, kv_lora_rank=128,
+        qk_rope_dim=16, qk_nope_dim=32, v_head_dim=32,
+        num_experts=8, num_shared_experts=2, top_k=2, moe_d_ff=128,
+        first_dense_layers=1, q_chunk=16, kv_chunk=16,
+    )
+
+
+register_arch("deepseek-v2-236b", full, smoke)

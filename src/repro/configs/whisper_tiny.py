@@ -1,0 +1,27 @@
+"""whisper-tiny [audio]: 4L (enc+dec) d_model=384 6H d_ff=1536
+vocab=51865 — enc-dec with conv frontend STUB (input_specs provides frame
+embeddings) [arXiv:2212.04356; unverified]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_arch
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="audio",
+        num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+        d_ff=1536, vocab_size=51865, head_dim=64,
+        is_encoder_decoder=True, num_encoder_layers=4, encoder_seq=1500,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=512, head_dim=32,
+        is_encoder_decoder=True, num_encoder_layers=2, encoder_seq=24,
+        q_chunk=16, kv_chunk=16,
+    )
+
+
+register_arch("whisper-tiny", full, smoke)

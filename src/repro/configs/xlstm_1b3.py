@@ -1,0 +1,25 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H d_ff=0 vocab=50304 — sLSTM +
+mLSTM blocks at 1:7 [arXiv:2405.04517; unverified]. Attention-free;
+O(1)-state decode => runs the long_500k cell."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_arch
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        num_layers=48, d_model=2048, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=50304,
+        slstm_every=8, mlstm_proj_factor=2.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-smoke", family="ssm",
+        num_layers=4, d_model=256, num_heads=2, num_kv_heads=2,
+        d_ff=0, vocab_size=512, slstm_every=4,
+    )
+
+
+register_arch("xlstm-1.3b", full, smoke)

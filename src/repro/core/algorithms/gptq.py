@@ -1,0 +1,60 @@
+"""GPTQ (Frantar et al., arXiv:2210.17323): approximate second-order PTQ.
+
+Per layer: Hessian H = 2 X^T X from calibration activations; iterate over
+input dims in order, quantize each weight row, and distribute the induced
+error onto not-yet-quantized rows via the Cholesky factor of H^{-1}.
+Group-wise scales are (re)computed at each group boundary from the
+*current* (error-compensated) weights — the standard fine-grained GPTQ.
+
+Numpy implementation (offline, layer-at-a-time; K <= few-thousand here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quant import qmax
+
+
+def gptq_quantize(
+    w: np.ndarray,       # (K, N) f32 — rows are input features
+    x: np.ndarray,       # (n, K) f32 calibration inputs
+    bits: int,
+    group_size: int,
+    percdamp: float = 0.01,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (codes int8 (K, N), scales f32 (G, N))."""
+    K, N = w.shape
+    gs = group_size if group_size > 0 else K
+    G = K // gs
+    qm = qmax(bits)
+
+    H = 2.0 * (x.T @ x).astype(np.float64)  # (K, K)
+    # dead inputs: keep numerically sane
+    dead = np.diag(H) == 0
+    H[dead, dead] = 1.0
+    w = w.astype(np.float64).copy()
+    w[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(H))
+    H[np.diag_indices(K)] += damp
+
+    # Cholesky of H^{-1}, upper-triangular (GPTQ's preferred form)
+    import scipy.linalg
+
+    Hinv = scipy.linalg.cholesky(np.linalg.inv(H), lower=False)
+    codes = np.zeros((K, N), np.int8)
+    scales = np.zeros((G, N), np.float32)
+
+    for g in range(G):
+        i0, i1 = g * gs, (g + 1) * gs
+        # group scale from current (compensated) weights
+        s = np.maximum(np.abs(w[i0:i1]).max(axis=0), 1e-8) / qm  # (N,)
+        scales[g] = s.astype(np.float32)
+        for i in range(i0, i1):
+            d = Hinv[i, i]
+            q = np.clip(np.round(w[i] / s), -qm, qm)
+            codes[i] = q.astype(np.int8)
+            err = (w[i] - q * s) / d
+            # compensate all remaining rows
+            if i + 1 < K:
+                w[i + 1:] -= np.outer(Hinv[i, i + 1:], err)
+    return codes, scales

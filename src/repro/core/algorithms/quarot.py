@@ -1,0 +1,38 @@
+"""QuaRot-lite (Ashkboos et al., arXiv:2404.00456): rotation-based PTQ.
+
+Computation-invariant orthogonal rotation: W' = Q^T W with x rotated
+online (x' = x Q), so x'W' = xW exactly while the rotated weight (and
+activation) distributions are incoherent — outliers are spread out, which
+is what rescues W4A4 (paper Table 1's QuaRot rows). We use a seeded random
+orthogonal Q (QR of a Gaussian) — the Hadamard of the original is a
+special case; random orthogonal has the same incoherence property
+(QuIP/QuaRot theory) without the power-of-two size restriction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .awq import _rtn
+
+
+def random_orthogonal(K: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((K, K))
+    q, r = np.linalg.qr(a)
+    # fix signs for determinism
+    q = q * np.sign(np.diag(r))[None, :]
+    return q.astype(np.float32)
+
+
+def quarot_quantize(
+    w: np.ndarray,   # (K, N)
+    bits: int,
+    group_size: int,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (codes, scales, rot (K,K)) for W' = rot.T @ W."""
+    K, N = w.shape
+    gs = group_size if group_size > 0 else K
+    rot = random_orthogonal(K, seed)
+    codes, scales = _rtn(rot.T @ w, bits, gs)
+    return codes, scales, rot

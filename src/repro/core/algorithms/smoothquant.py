@@ -1,0 +1,28 @@
+"""SmoothQuant (Xiao et al., arXiv:2211.10438): outlier migration.
+
+s_j = max|x_j|^alpha / max|w_j|^(1-alpha) — activations divided by s,
+weights multiplied by s (realized as qlinear ``pre_scale``, identical
+math to folding into the previous layer). alpha=0.5 default.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .awq import _rtn
+
+
+def smoothquant_quantize(
+    w: np.ndarray,   # (K, N)
+    x: np.ndarray,   # (n, K)
+    bits: int,
+    group_size: int,
+    alpha: float = 0.5,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    K, N = w.shape
+    gs = group_size if group_size > 0 else K
+    x_max = np.maximum(np.abs(x).max(axis=0), 1e-5)        # (K,)
+    w_max = np.maximum(np.abs(w).max(axis=1), 1e-5)        # (K,)
+    s = (x_max ** alpha) / (w_max ** (1 - alpha))
+    s = np.maximum(s, 1e-4).astype(np.float32)
+    codes, scales = _rtn(w * s[:, None], bits, gs)
+    return codes, scales, s

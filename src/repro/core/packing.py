@@ -1,0 +1,61 @@
+"""Int4 nibble packing with a TPU-friendly layout.
+
+GPU kernels (Marlin, FastGEMM) interleave int4 weights for ldmatrix/warp
+lanes; the TPU analogue we chose avoids in-kernel gathers entirely.
+
+The *layout unit* is fixed at 128 k-rows (one MXU contraction tile),
+independent of the quantization scale group. Within each unit of 128
+consecutive k-rows, packed byte-row ``b`` (of 64) holds
+
+    low nibble  -> k = unit_start + b
+    high nibble -> k = unit_start + 64 + b
+
+so a kernel unpacks one unit with two int32 shift pairs and ONE concat on
+the sublane (second-minor) dimension — natural k-order is reconstructed
+without any lane permutation, and activations need no re-layout at all.
+Decoupling layout from scale group means the same packed tensor serves
+fine-grained (group=128/256/...) and coarse (per-channel) scales alike.
+
+Packed shape: (K/2, N) int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LAYOUT_UNIT = 128  # k-rows per packing unit (= MXU tile on the K dim)
+
+
+def layout_unit_for(K: int) -> int:
+    """128 when possible; small-K fallback (smoke configs) packs K as one
+    unit (K must be even)."""
+    if K % LAYOUT_UNIT == 0:
+        return LAYOUT_UNIT
+    if K % 2 != 0:
+        raise ValueError(f"K={K} must be even to nibble-pack")
+    return K
+
+
+def pack_int4(q: jax.Array, unit: int | None = None) -> jax.Array:
+    """(K, N) int8 in [-8,7] -> (K/2, N) int8 nibble-packed (layout above)."""
+    K, N = q.shape
+    u = unit or layout_unit_for(K)
+    h = u // 2
+    q3 = q.reshape(K // u, u, N)
+    lo = q3[:, :h, :].astype(jnp.int32) & 0xF
+    hi = q3[:, h:, :].astype(jnp.int32) & 0xF
+    packed = (lo | (hi << 4)).astype(jnp.uint8).astype(jnp.int8)
+    return packed.reshape(K // 2, N)
+
+
+def unpack_int4(packed: jax.Array, unit: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_int4` -> (K, N) int8, sign-extended."""
+    Kh, N = packed.shape
+    K = Kh * 2
+    u = unit or layout_unit_for(K)
+    h = u // 2
+    p3 = packed.reshape(K // u, h, N).astype(jnp.int32)
+    lo = jnp.left_shift(p3, 28) >> 28  # sign-extend low nibble
+    hi = jnp.left_shift(p3, 24) >> 28  # sign-extend high nibble
+    q3 = jnp.concatenate([lo, hi], axis=1)  # (K/u, u, N) natural order
+    return q3.reshape(K, N).astype(jnp.int8)

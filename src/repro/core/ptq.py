@@ -1,0 +1,162 @@
+"""Post-training quantization orchestrator.
+
+``post_training_quantize`` turns a trained fp param tree into a quantized
+one per a :class:`~repro.core.recipe.QuantRecipe`:
+
+  1. run calibration batches EAGERLY with ``cfg.scan_layers=False`` while
+     ``models.common`` capture hooks record each linear's input
+     activations per (path, layer-call-order);
+  2. per linear, run the spec's algorithm (rtn/gptq/awq/smoothquant/
+     omniquant, optionally QuaRot rotation) -> codes + float scales
+     (+ pre_scale / rot);
+  3. finish with the Integer Scale conversion (or keep float scales) via
+     ``qlinear.finish_quant`` — the paper's plug-and-play step.
+
+Which tensors quantize is decided by walking the *quantized spec tree*
+(``api.param_specs(cfg, recipe)``) in parallel with the fp params — only
+nodes the model itself declared as quantized linears convert, so heads,
+embeddings, conv filters and gate vectors stay fp exactly as the specs say.
+Stacked (scanned) weights quantize layer-by-layer (captured activations are
+indexed by call order), then re-stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as MC
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+from . import qlinear
+from .algorithms.awq import awq_quantize
+from .algorithms.gptq import gptq_quantize
+from .algorithms.omniquant import omniquant_quantize
+from .algorithms.quarot import quarot_quantize
+from .algorithms.smoothquant import smoothquant_quantize
+from .recipe import QuantRecipe, QuantSpec
+
+
+def collect_calibration(api: ModelApi, cfg: ModelConfig, fp_params: Any,
+                        batches: list[dict]) -> dict[str, list[np.ndarray]]:
+    """Run batches eagerly (unrolled layers) and capture linear inputs."""
+    cfg_unrolled = dataclasses.replace(cfg, scan_layers=False)
+    MC.start_capture()
+    try:
+        for b in batches:
+            api.apply(fp_params, cfg_unrolled, jnp.asarray(b["tokens"]),
+                      mode="train",
+                      memory=(jnp.asarray(b["image_embeds"])
+                              if "image_embeds" in b else
+                              jnp.asarray(b["frames"])
+                              if "frames" in b else None))
+    finally:
+        captured = MC.end_capture()
+    return captured
+
+
+def _calib_for(captured: dict, path: str, layer: int | None,
+               n_layers: int) -> np.ndarray:
+    """Per-batch call order for a scanned path is [b0: l0..lL-1, b1: ...]."""
+    recs = captured.get(path, [])
+    if not recs:
+        return np.zeros((0, 0), np.float32)
+    if layer is None or n_layers <= 1:
+        return np.concatenate(recs, axis=0)
+    per_batch = len(recs) // n_layers
+    if per_batch == 0:
+        return np.concatenate(recs, axis=0)
+    picks = [recs[b * n_layers + layer] for b in range(per_batch)]
+    return np.concatenate(picks, axis=0)
+
+
+def quantize_one(w: np.ndarray, x: np.ndarray, spec: QuantSpec,
+                 bias=None, seed: int = 0) -> dict:
+    """One linear: algorithm -> codes/scales(+extras) -> finish_quant."""
+    w = np.asarray(w, np.float32)
+    if spec.rotate:
+        codes, scales, rot_np = quarot_quantize(
+            w, spec.w_bits, spec.group_size, seed=seed)
+        return qlinear.finish_quant(
+            jnp.asarray(codes), jnp.asarray(scales), spec, bias=bias,
+            rot=jnp.asarray(rot_np, jnp.bfloat16))
+    if spec.algo in ("rtn", "odyssey") or x.size == 0:
+        from .quant import quantize_weight
+
+        gs = -1 if spec.algo == "odyssey" else spec.group_size
+        eff = dataclasses.replace(spec, group_size=gs)
+        qw = quantize_weight(jnp.asarray(w), spec.w_bits, gs,
+                             spec.clip_ratio)
+        scales = qw.scale if eff.fine_grained else qw.scale[None, :]
+        return qlinear.finish_quant(qw.qvalue, scales, eff, bias=bias)
+    if spec.algo == "gptq":
+        codes, scales = gptq_quantize(w, x, spec.w_bits, spec.group_size)
+        pre_scale = None
+    elif spec.algo == "awq":
+        codes, scales, pre_scale = awq_quantize(
+            w, x, spec.w_bits, spec.group_size)
+    elif spec.algo == "smoothquant":
+        codes, scales, pre_scale = smoothquant_quantize(
+            w, x, spec.w_bits, spec.group_size)
+    elif spec.algo == "omniquant":
+        codes, scales = omniquant_quantize(w, x, spec.w_bits,
+                                           spec.group_size)
+        pre_scale = None
+    else:
+        raise ValueError(spec.algo)
+    return qlinear.finish_quant(
+        jnp.asarray(codes), jnp.asarray(scales), spec,
+        bias=bias, pre_scale=pre_scale)
+
+
+def post_training_quantize(api: ModelApi, cfg: ModelConfig, fp_params: Any,
+                           recipe: QuantRecipe,
+                           calib_batches: list[dict] | None = None) -> Any:
+    """fp params tree -> quantized params tree matching
+    ``api.param_specs(cfg, recipe)``."""
+    qspec_tree = api.param_specs(cfg, recipe)
+    needs_calib = any(
+        spec is not None and (spec.algo != "rtn" or spec.rotate)
+        for _, spec in recipe.rules)
+    captured: dict = {}
+    if needs_calib and calib_batches:
+        captured = collect_calibration(api, cfg, fp_params, calib_batches)
+
+    def walk(fp_node, spec_node, path):
+        if isinstance(spec_node, dict) and "qvalue" in spec_node:
+            # model declared this node quantized
+            spec = recipe.spec_for(path)
+            assert spec is not None, path
+            w = np.asarray(fp_node["w"], np.float32)
+            bias = fp_node.get("b")
+            if w.ndim == 2:
+                x = _calib_for(captured, path, None, 1)
+                return quantize_one(w, x, spec, bias=bias)
+            if w.ndim == 3:  # scanned layers OR experts: per-slice calib
+                L = w.shape[0]
+                outs = [quantize_one(
+                    w[i], _calib_for(captured, path, i, L), spec,
+                    bias=(bias[i] if bias is not None else None), seed=i)
+                    for i in range(L)]
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            # >=4D (scanned MoE: layers x experts x K x N): RTN+IS per slice
+            lead = w.shape[:-2]
+            flat = w.reshape(-1, *w.shape[-2:])
+            bflat = (np.asarray(bias).reshape(-1, bias.shape[-1])
+                     if bias is not None else None)
+            outs = [quantize_one(
+                flat[i], np.zeros((0, 0), np.float32), spec,
+                bias=(bflat[i] if bflat is not None else None), seed=i)
+                for i in range(flat.shape[0])]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            return jax.tree.map(
+                lambda a: a.reshape(*lead, *a.shape[1:]), stacked)
+        if isinstance(spec_node, dict):
+            return {k: walk(fp_node[k], v, f"{path}/{k}" if path else k)
+                    for k, v in spec_node.items()}
+        return fp_node
+
+    return walk(fp_params, qspec_tree, "")

@@ -1,0 +1,264 @@
+"""Quantized linear layer: spec declaration, offline quantization, apply.
+
+This is the model-facing integration point of Integer Scale. A linear layer
+in any architecture is declared through :func:`linear_specs`; depending on
+the :class:`~repro.core.recipe.QuantSpec` attached to its path it becomes
+
+  * FP (bf16) linear                          (spec is None)
+  * fine/coarse W{4,8}A{4,8,16} quantized     (storage: packed int4 / int8)
+
+Apply dispatches between the pure-jnp reference path (always available; used
+for dry-run lowering and CPU tests) and the Pallas TPU kernels in
+``repro.kernels`` (used on real TPUs; validated via interpret mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import spec as S
+from . import packing, quant
+from .integer_scale import integerize
+from .quant import QWeight, quantize_activation, quantize_weight
+from .recipe import QuantSpec
+
+KernelMode = Literal["reference", "pallas", "pallas_interpret"]
+
+# Module-level default; launch/dryrun and tests override per-call.
+_DEFAULT_MODE: KernelMode = "reference"
+
+
+def set_default_kernel_mode(mode: KernelMode) -> None:
+    global _DEFAULT_MODE
+    _DEFAULT_MODE = mode
+
+
+def default_kernel_mode() -> KernelMode:
+    return _DEFAULT_MODE
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _num_groups(K: int, group_size: int) -> int:
+    return 1 if group_size <= 0 else K // group_size
+
+
+def linear_specs(
+    K: int,
+    N: int,
+    qspec: QuantSpec | None,
+    axes: tuple[str | None, str | None],
+    *,
+    bias: bool = False,
+    dtype=jnp.bfloat16,
+) -> dict[str, S.ParamSpec]:
+    """Parameter specs for one (possibly quantized) linear of shape (K, N).
+
+    ``axes`` are the logical axes of (K, N) e.g. ("embed", "mlp").
+    """
+    ax_in, ax_out = axes
+    out: dict[str, S.ParamSpec] = {}
+    if qspec is None:
+        out["w"] = S.w((K, N), (ax_in, ax_out), dtype=dtype)
+    else:
+        G = _num_groups(K, qspec.group_size)
+        if qspec.w_bits == 4:
+            out["qvalue"] = S.zeros((K // 2, N), (ax_in, ax_out), dtype=jnp.int8)
+        elif qspec.w_bits == 8:
+            out["qvalue"] = S.zeros((K, N), (ax_in, ax_out), dtype=jnp.int8)
+        else:
+            raise ValueError(f"unsupported w_bits={qspec.w_bits}")
+        if (qspec.scale_mode == "integer" and not qspec.weight_only
+                and qspec.fine_grained):
+            out["scale"] = S.ones((G, N), (ax_in, ax_out), dtype=jnp.int32)
+            # per-layer amplifier (supports the heuristic search, Listing 1)
+            out["alpha"] = S.ones((), (), dtype=jnp.float32)
+        else:
+            out["scale"] = S.ones((G, N), (ax_in, ax_out), dtype=jnp.float32)
+        if qspec.algo in ("awq", "smoothquant"):
+            # per-in-channel activation compensation (x / pre_scale)
+            out["pre_scale"] = S.ones((K,), (ax_in,), dtype=jnp.float32)
+        if qspec.rotate:
+            # QuaRot-style orthogonal rotation applied online to x
+            out["rot"] = S.w((K, K), (ax_in, None), dtype=dtype)
+    if bias:
+        out["b"] = S.zeros((N,), (ax_out,), dtype=dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Offline quantization of a trained fp weight -> param arrays
+# ---------------------------------------------------------------------------
+
+
+def finish_quant(
+    codes: jax.Array,   # int8 (K, N) quantized codes
+    scales: jax.Array,  # f32 (G, N) (G=1 for coarse)
+    qspec: QuantSpec,
+    *,
+    bias: jax.Array | None = None,
+    pre_scale: jax.Array | None = None,
+    rot: jax.Array | None = None,
+) -> dict[str, jax.Array]:
+    """Shared finishing step for every algorithm: pack int4, integerize the
+    scales (the paper's free lunch), assemble the param dict."""
+    qvalue = packing.pack_int4(codes) if qspec.w_bits == 4 else codes
+    out: dict[str, jax.Array] = {"qvalue": qvalue}
+    if (qspec.scale_mode == "integer" and not qspec.weight_only
+            and qspec.fine_grained):
+        # Integer Scale applies to fine-grained group scales (paper §4);
+        # coarse specs keep the single float scale (nothing to amortize).
+        qw = QWeight(codes, scales, qspec.w_bits, qspec.group_size)
+        isw = integerize(qw, qspec.amplifier)
+        out["scale"] = isw.int_scale
+        out["alpha"] = jnp.float32(isw.alpha)
+    else:
+        out["scale"] = scales
+    if bias is not None:
+        out["b"] = bias
+    if pre_scale is not None:
+        out["pre_scale"] = jnp.asarray(pre_scale, jnp.float32)
+    if rot is not None:
+        out["rot"] = rot
+    return out
+
+
+def quantize_linear(
+    w: jax.Array,
+    qspec: QuantSpec,
+    *,
+    bias: jax.Array | None = None,
+) -> dict[str, jax.Array]:
+    """RTN path (algorithms/ provide GPTQ/AWQ/... on top of finish_quant)."""
+    K, N = w.shape
+    qw = quantize_weight(w, qspec.w_bits, qspec.group_size, qspec.clip_ratio)
+    scales = qw.scale if qspec.fine_grained else qw.scale[None, :]
+    return finish_quant(qw.qvalue, scales, qspec, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _unpack(params: dict, qspec: QuantSpec, K: int) -> jax.Array:
+    if qspec.w_bits == 4:
+        return packing.unpack_int4(params["qvalue"])
+    return params["qvalue"]
+
+
+def linear_apply(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    qspec: QuantSpec | None,
+    *,
+    mode: KernelMode | None = None,
+) -> jax.Array:
+    """y = x @ W (+ b), honoring the quantization spec.
+
+    x: (..., K) activation (bf16/f32). Returns same float dtype as x.
+    """
+    mode = mode or _DEFAULT_MODE
+    if qspec is None:
+        y = x @ params["w"].astype(x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    out_dtype = x.dtype
+
+    if "pre_scale" in params:  # AWQ/SmoothQuant activation compensation
+        x2 = x2 / params["pre_scale"].astype(x2.dtype)
+    if "rot" in params:  # QuaRot-style online rotation
+        x2 = x2 @ params["rot"].astype(x2.dtype)
+
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        y2 = kops.qgemm(
+            x2, params["qvalue"], params["scale"], qspec,
+            interpret=(mode == "pallas_interpret"),
+        )
+    else:
+        y2 = _reference_qgemm(x2, params, qspec, K)
+
+    y = y2.reshape(*lead, -1).astype(out_dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def _reference_qgemm(x2, params, qspec: QuantSpec, K: int) -> jax.Array:
+    """Pure-jnp semantics of every supported scheme (also the dry-run path —
+    int8 dot_generals appear in HLO so the roofline sees integer compute)."""
+    wq = _unpack(params, qspec, K)  # int8 (K, N)
+    N = wq.shape[1]
+    gs = qspec.group_size if qspec.group_size > 0 else K
+    G = K // gs
+    scale = params["scale"]
+
+    if qspec.weight_only:
+        # W4A16 Marlin-analog: dequant to activation dtype, fp GEMM.
+        w = wq.reshape(G, gs, N).astype(jnp.float32) * scale[:, None, :]
+        return x2 @ w.reshape(K, N).astype(x2.dtype)
+
+    xq, sa = quantize_activation(x2, qspec.a_bits)  # int8, (M,1) f32
+    x3 = xq.reshape(-1, G, gs)
+    w3 = wq.reshape(G, gs, N)
+    part = jax.lax.dot_general(
+        x3, w3,
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32,
+    )  # (G, M, N)
+    if qspec.scale_mode == "integer" and qspec.fine_grained:
+        acc = jnp.sum(part * scale[:, None, :], axis=0)  # int32
+        return acc.astype(jnp.float32) * (sa / params["alpha"])
+    acc = jnp.sum(part.astype(jnp.float32) * scale[:, None, :], axis=0)
+    return acc * sa
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree quantization: fp params -> quantized params per recipe
+# ---------------------------------------------------------------------------
+
+
+def quantize_tree(
+    fp_params: Any,
+    fp_specs: Any,
+    recipe,
+    *,
+    adjusted: dict[str, jax.Array] | None = None,
+) -> Any:
+    """Walk a param tree; each dict node shaped like a linear ({"w": (K,N)})
+    whose path matches the recipe is replaced by quantized arrays.
+
+    ``adjusted``: optional path->weight overrides produced by calibration
+    algorithms (GPTQ/AWQ/...) — quantization then uses the adjusted weight.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict) and "w" in node and not isinstance(node["w"], dict):
+            w = node["w"]
+            if hasattr(w, "ndim") and w.ndim == 2:
+                qspec = recipe.spec_for(path)
+                if qspec is not None:
+                    src = adjusted.get(path, w) if adjusted else w
+                    return quantize_linear(
+                        jnp.asarray(src, jnp.float32), qspec,
+                        bias=node.get("b"),
+                    )
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        return node
+
+    return walk(fp_params, "")

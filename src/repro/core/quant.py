@@ -1,0 +1,187 @@
+"""Quantization primitives (paper Appendix A).
+
+Symmetric / asymmetric uniform quantization at per-tensor, per-token,
+per-channel and group-wise (fine-grained) granularity, for both weights and
+activations. Everything is pure jnp and jit-able; these are the building
+blocks used by core.algorithms (GPTQ/AWQ/...), core.qlinear and the kernels'
+reference oracles.
+
+Conventions
+-----------
+* Weights are ``(K, N)`` = (in_features, out_features); quantization axes:
+  - per-channel: one scale per output channel N  -> scales ``(N,)``
+  - group-wise : K split into groups of ``group_size`` -> scales ``(K/g, N)``
+* Activations are ``(..., K)``; per-token quantization gives one scale per
+  row -> scales ``(..., 1)``.
+* Symmetric int range for b bits: ``[-(2^{b-1}-1), 2^{b-1}-1]`` (e.g. int8:
+  [-127,127], int4: [-7,7]) — matches the paper (Eq. 3-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+ScaleMode = Literal["float", "integer"]
+
+
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def qmin(bits: int, sym: bool = True) -> int:
+    return -(2 ** (bits - 1) - 1) if sym else 0
+
+
+# ---------------------------------------------------------------------------
+# Scalar scale computation (Eq. 3 / Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def symmetric_scale(x: jax.Array, axis, bits: int, keepdims=True, eps=1e-8):
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, eps) / qmax(bits)
+
+
+def asymmetric_scale_zp(x: jax.Array, axis, bits: int, keepdims=True, eps=1e-8):
+    xmax = jnp.max(x, axis=axis, keepdims=keepdims)
+    xmin = jnp.min(x, axis=axis, keepdims=keepdims)
+    scale = jnp.maximum(xmax - xmin, eps) / (2**bits - 1)
+    zp = jnp.floor(-xmin / scale + 0.5)
+    return scale, zp
+
+
+def quantize(x, scale, bits: int, sym: bool = True, zp=None):
+    """Round-to-nearest quantize with clamping (Eq. 4 / Eq. 6)."""
+    if sym:
+        q = jnp.clip(jnp.round(x / scale), qmin(bits), qmax(bits))
+    else:
+        q = jnp.clip(jnp.round(x / scale) + zp, 0, 2**bits - 1)
+    return q
+
+
+def dequantize(q, scale, sym: bool = True, zp=None):
+    if sym:
+        return q * scale
+    return (q - zp) * scale
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QWeight:
+    """Quantized weight bundle (always symmetric per the paper's main setup).
+
+    ``qvalue`` is int8 storage regardless of logical bit-width (int4 values
+    occupy int8 here; the kernels' packer nibble-packs separately).
+    ``scale``: per-channel -> (N,), group-wise -> (K/g, N). float32.
+    """
+
+    qvalue: jax.Array  # int8, (K, N)
+    scale: jax.Array  # f32, (N,) or (K/g, N)
+    bits: int
+    group_size: int  # -1 => per-channel (coarse)
+
+    @property
+    def fine_grained(self) -> bool:
+        return self.group_size > 0
+
+    def dequant(self) -> jax.Array:
+        if not self.fine_grained:
+            return self.qvalue.astype(jnp.float32) * self.scale[None, :]
+        K, N = self.qvalue.shape
+        g = self.group_size
+        wq = self.qvalue.reshape(K // g, g, N).astype(jnp.float32)
+        return (wq * self.scale[:, None, :]).reshape(K, N)
+
+
+def quantize_weight(
+    w: jax.Array, bits: int, group_size: int = -1, clip_ratio: float = 1.0
+) -> QWeight:
+    """Symmetric RTN weight quantization, coarse (per-channel) or fine (group).
+
+    ``clip_ratio`` < 1 shrinks the absmax before computing the scale
+    (used by AWQ-style clipping search).
+    """
+    if w.ndim != 2:
+        raise ValueError(f"weights must be (K, N), got {w.shape}")
+    K, N = w.shape
+    w = w.astype(jnp.float32)
+    if group_size <= 0:
+        scale = symmetric_scale(w * clip_ratio, axis=0, bits=bits, keepdims=False)
+        q = quantize(w, scale[None, :], bits)
+        return QWeight(q.astype(jnp.int8), scale, bits, -1)
+    if K % group_size != 0:
+        raise ValueError(f"K={K} not divisible by group_size={group_size}")
+    wg = w.reshape(K // group_size, group_size, N)
+    scale = symmetric_scale(wg * clip_ratio, axis=1, bits=bits, keepdims=False)
+    q = quantize(wg, scale[:, None, :], bits)
+    return QWeight(q.reshape(K, N).astype(jnp.int8), scale, bits, group_size)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (per-token, symmetric — paper default)
+# ---------------------------------------------------------------------------
+
+
+def quantize_activation(x: jax.Array, bits: int = 8):
+    """Per-token symmetric quantization of the last axis.
+
+    Returns (q int8, scale f32 broadcastable over last axis).
+    """
+    scale = symmetric_scale(x.astype(jnp.float32), axis=-1, bits=bits)
+    q = quantize(x.astype(jnp.float32), scale, bits).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Fine-grained GEMM reference semantics (Eq. 1) — float scale
+# ---------------------------------------------------------------------------
+
+
+def fg_gemm_float_scale(
+    xq: jax.Array,  # int8 (..., K)
+    sa: jax.Array,  # f32  (..., 1) per-token
+    qw: QWeight,
+) -> jax.Array:
+    """Eq. 1: per-group integer matmul, each partial converted to f32 and
+    scaled by the group's float scale, then accumulated in f32."""
+    K, N = qw.qvalue.shape
+    g = qw.group_size if qw.fine_grained else K
+    G = K // g
+    x3 = xq.reshape(*xq.shape[:-1], G, g)
+    w3 = qw.qvalue.reshape(G, g, N)
+    # (..., G, g) x (G, g, N) -> (..., G, N) int32 partials
+    part = jax.lax.dot_general(
+        x3, w3,
+        dimension_numbers=(((x3.ndim - 1,), (1,)), ((x3.ndim - 2,), (0,))),
+        preferred_element_type=jnp.int32,
+    )  # (G, ..., N) — batch dims come first
+    part = jnp.moveaxis(part, 0, -2)  # (..., G, N)
+    scale = qw.scale if qw.fine_grained else qw.scale[None, :] * jnp.ones((1, 1))
+    if not qw.fine_grained:
+        scale = qw.scale.reshape(1, N)
+    acc = jnp.sum(part.astype(jnp.float32) * scale, axis=-2)  # (..., N)
+    return acc * sa
+
+
+# ---------------------------------------------------------------------------
+# Utility: quantization error metrics
+# ---------------------------------------------------------------------------
+
+
+def weight_mse(w: jax.Array, qw: QWeight) -> jax.Array:
+    return jnp.mean((w.astype(jnp.float32) - qw.dequant()) ** 2)
+
+
+def output_mse(w, qw, x) -> jax.Array:
+    ref = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    xq, sa = quantize_activation(x)
+    out = fg_gemm_float_scale(xq, sa, qw)
+    return jnp.mean((ref - out) ** 2)

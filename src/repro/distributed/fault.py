@@ -1,0 +1,66 @@
+"""Fault-tolerance utilities: heartbeats, straggler detection, restart drill.
+
+On a real cluster these hooks feed a supervisor (k8s / Borg-style) that
+reschedules slow or dead hosts; checkpoint+elastic-restore (see
+repro.checkpoint.manager) closes the loop. Everything here is
+dependency-free so it runs identically in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HeartbeatConfig:
+    straggler_factor: float = 3.0   # step slower than 3x median => straggler
+    window: int = 32                # median window
+    deadline_s: float = 600.0       # hard per-step deadline
+
+
+class Heartbeat:
+    """Wraps the train loop's step boundary; detects stragglers."""
+
+    def __init__(self, cfg: HeartbeatConfig | None = None,
+                 on_straggler: Callable[[int, float, float], None] | None = None):
+        self.cfg = cfg or HeartbeatConfig()
+        self.times: list[float] = []
+        self.straggler_steps: list[int] = []
+        self._t0: float | None = None
+        self._on_straggler = on_straggler
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> float:
+        dt = time.monotonic() - (self._t0 or time.monotonic())
+        self.times.append(dt)
+        window = self.times[-self.cfg.window:]
+        if len(window) >= 5:
+            med = statistics.median(window)
+            if dt > self.cfg.straggler_factor * med or dt > self.cfg.deadline_s:
+                self.straggler_steps.append(step)
+                if self._on_straggler:
+                    self._on_straggler(step, dt, med)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class FailureInjector:
+    """Deterministic failure injection for restart drills (tests/examples):
+    raises at a configured step, exactly once."""
+
+    def __init__(self, fail_at_step: int | None = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int) -> None:
+        if (self.fail_at_step is not None and step == self.fail_at_step
+                and not self.fired):
+            self.fired = True
+            raise RuntimeError(f"injected node failure at step {step}")

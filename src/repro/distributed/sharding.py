@@ -1,0 +1,104 @@
+"""Logical-axis -> mesh-axis sharding rules per execution mode.
+
+One rule table per mode; :func:`repro.nn.spec.partition_specs` applies them
+with divisibility checks (a mapping that doesn't divide the dim is dropped
+to replication — this is what lets granite's kv=1 MQA and minicpm3's odd
+vocab coexist with a 16-way model axis).
+
+Axes vocabulary (see models/*):
+  embed, mlp, mlp2, moe_mlp, heads_q, heads_kv, q_lora, kv_lora, vocab,
+  experts, layers, cache_batch, cache_seq, batch, seq
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import spec as S
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Training: FSDP over data (weights sharded on embed/mlp-in), TP over model
+# (heads / ffn-out), EP over model for experts. `pod` composes as outer DP.
+
+
+def train_rules(multi_pod: bool) -> S.Rules:
+    data = ("pod", "data") if multi_pod else ("data",)
+    return (
+        ("embed", data),
+        ("mlp", "model"),
+        ("mlp2", None),
+        ("moe_mlp", "model"),
+        ("heads_q", "model"),
+        ("heads_kv", "model"),
+        ("q_lora", None),
+        ("kv_lora", None),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("layers", None),
+        ("cache_batch", data),
+        ("cache_seq", "model"),
+    )
+
+
+# Serving: weights TP-only on model (replicated across data rows so each
+# row serves its batch slice with no weight collectives); batch over
+# (pod,)data; KV sequence over model (flash-decoding style partial softmax).
+
+
+def serve_rules(multi_pod: bool) -> S.Rules:
+    data = ("pod", "data") if multi_pod else ("data",)
+    return (
+        ("embed", None),
+        ("mlp", "model"),
+        ("mlp2", None),
+        ("moe_mlp", None),
+        ("heads_q", "model"),
+        ("heads_kv", "model"),
+        ("q_lora", None),
+        ("kv_lora", None),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("layers", None),
+        ("cache_batch", data),
+        ("cache_seq", "model"),
+    )
+
+
+def rules_for(mode: str, multi_pod: bool = False) -> S.Rules:
+    return train_rules(multi_pod) if mode == "train" else serve_rules(multi_pod)
+
+
+# ---------------------------------------------------------------------------
+# Activation / input shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def input_shardings(mesh: Mesh, inputs: dict, multi_pod: bool = False,
+                    divisible: bool = True) -> dict:
+    """tokens/labels: shard batch over (pod,)data; stubs likewise."""
+    b = batch_axes(multi_pod)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bsz = (sizes.get("pod", 1) * sizes["data"]) if multi_pod else sizes["data"]
+
+    def one(v):
+        if v.shape and v.shape[0] % bsz == 0:
+            return NamedSharding(mesh, P(b, *([None] * (len(v.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return {k: one(v) for k, v in inputs.items()}
+
+
+def named_tree(mesh: Mesh, spec_tree, rules: S.Rules):
+    return S.named_shardings(spec_tree, rules, mesh)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

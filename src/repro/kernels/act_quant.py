@@ -1,0 +1,58 @@
+"""Fused per-token activation quantization kernel (producer for the qGEMMs).
+
+Per-token symmetric absmax int8 quantization of the last axis — the
+activation-side half of W4A8/W8A8 (paper §5.1 "per-token activation
+quantization"). Fusing this into a single VMEM pass (read bf16 row, write
+int8 row + f32 scale) is part of the FastGEMM-style fusion the paper
+borrows from OdysseyLLM (§4.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .w4a8_gemm import _cdiv, _round_up
+
+
+def _kernel(x_ref, q_ref, s_ref, *, qm: float):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qm
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -qm, qm).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant(
+    x: jax.Array,  # (M, K) bf16/f32
+    *,
+    bits: int = 8,
+    bm: int = 256,
+    interpret: bool = False,
+):
+    """Returns (q int8 (M,K), scale f32 (M,1))."""
+    M, K = x.shape
+    qm = float(2 ** (bits - 1) - 1)
+    bm = min(bm, _round_up(M, 8))
+    Mp = _round_up(M, bm)
+    if Mp != M:
+        # pad with ones (not zeros) so padded rows have a sane nonzero amax
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)), constant_values=1)
+    q, s = pl.pallas_call(
+        functools.partial(_kernel, qm=qm),
+        grid=(Mp // bm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, K), jnp.int8),
+            jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:M], s[:M]

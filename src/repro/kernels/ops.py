@@ -1,0 +1,63 @@
+"""Public jit'd wrappers over the Pallas kernels, plus scheme dispatch.
+
+``qgemm`` is the single entry point used by ``repro.core.qlinear`` when the
+kernel mode is "pallas" / "pallas_interpret": it routes a (QuantSpec,
+operands) pair to the right kernel. On this CPU container only
+``interpret=True`` executes; the BlockSpecs/grids are identical either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.recipe import QuantSpec
+
+from .act_quant import act_quant
+from .w4a8_gemm import fg_gemm_integer_scale
+from .w4a8_gemm_fscale import fg_gemm_float_scale
+from .w4a16_gemm import w4a16_gemm
+
+
+def qgemm(
+    x: jax.Array,         # (M, K) bf16/f32 activations
+    qvalue: jax.Array,    # packed/int8 weights
+    scale: jax.Array,     # int32 or f32 scales per scheme
+    qspec: QuantSpec,
+    *,
+    alpha: float | None = None,
+    interpret: bool = False,
+    block: dict | None = None,
+) -> jax.Array:
+    """Quantized GEMM honoring ``qspec``; returns f32 (M, N)."""
+    blk = block or {}
+    if qspec.weight_only:
+        if qspec.w_bits != 4:
+            raise NotImplementedError("weight-only kernel is W4A16")
+        return w4a16_gemm(
+            x, qvalue, scale, group_size=qspec.group_size,
+            interpret=interpret, **blk,
+        )
+
+    xq, sa = act_quant(x, bits=qspec.a_bits, interpret=interpret)
+    if qspec.scale_mode == "integer" and qspec.fine_grained:
+        if alpha is None:
+            alpha = float(qspec.amplifier) if isinstance(qspec.amplifier, int) \
+                else 1024.0
+        return fg_gemm_integer_scale(
+            xq, sa, qvalue, scale,
+            group_size=qspec.group_size, alpha=alpha, w_bits=qspec.w_bits,
+            interpret=interpret, **blk,
+        )
+    return fg_gemm_float_scale(
+        xq, sa, qvalue, scale,
+        group_size=qspec.group_size, w_bits=qspec.w_bits,
+        interpret=interpret, **blk,
+    )
+
+
+def qgemm_from_params(x, params: dict, qspec: QuantSpec, *, interpret=False,
+                      block=None):
+    """Convenience: dispatch straight from a qlinear param dict."""
+    alpha = float(params["alpha"]) if "alpha" in params else None
+    return qgemm(x, params["qvalue"], params["scale"], qspec,
+                 alpha=alpha, interpret=interpret, block=block)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles mirroring each Pallas kernel's exact I/O contract.
+
+Every oracle takes the *same packed/quantized operands* as its kernel so
+tests compare kernel-vs-oracle bit-exactly on the integer path (and to f32
+ulp tolerance on the float epilogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_int4
+
+
+def act_quant_ref(x: jax.Array, bits: int = 8):
+    """Per-token symmetric absmax quantization of the last axis."""
+    qm = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qm
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qm, qm)
+    return q.astype(jnp.int8), scale
+
+
+def _unpack_w(qvalue: jax.Array, w_bits: int, group_size: int, K: int):
+    if w_bits == 4:
+        return unpack_int4(qvalue)
+    return qvalue
+
+
+def fg_gemm_is_ref(
+    xq: jax.Array,      # int8 (M, K)
+    sa: jax.Array,      # f32 (M, 1)
+    qvalue: jax.Array,  # int8 (K/2, N) packed (w4) or (K, N) (w8)
+    int_scale: jax.Array,  # int32 (K/g, N)
+    *,
+    group_size: int,
+    alpha: float,
+    w_bits: int = 4,
+) -> jax.Array:
+    """Eq. 2 oracle: int32 group accumulation, single final convert."""
+    M, K = xq.shape
+    w = _unpack_w(qvalue, w_bits, group_size, K)
+    N = w.shape[1]
+    G = K // group_size
+    x3 = xq.reshape(M, G, group_size)
+    w3 = w.reshape(G, group_size, N)
+    part = jax.lax.dot_general(
+        x3, w3, (((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32,
+    )  # (G, M, N)
+    acc = jnp.sum(part * int_scale[:, None, :], axis=0)  # int32
+    return acc.astype(jnp.float32) * (sa / alpha)
+
+
+def fg_gemm_fs_ref(
+    xq: jax.Array,
+    sa: jax.Array,
+    qvalue: jax.Array,
+    scale: jax.Array,  # f32 (K/g, N) fine  or (1, N) coarse
+    *,
+    group_size: int,  # -1 => coarse
+    w_bits: int = 4,
+) -> jax.Array:
+    """Eq. 1 oracle: per-group I32->F32 convert + float-scale accumulate."""
+    M, K = xq.shape
+    gs = group_size if group_size > 0 else K
+    w = _unpack_w(qvalue, w_bits, group_size, K)
+    N = w.shape[1]
+    G = K // gs
+    x3 = xq.reshape(M, G, gs)
+    w3 = w.reshape(G, gs, N)
+    part = jax.lax.dot_general(
+        x3, w3, (((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.int32,
+    )  # (G, M, N)
+    acc = jnp.sum(part.astype(jnp.float32) * scale[:, None, :], axis=0)
+    return acc * sa
+
+
+def w4a16_gemm_ref(
+    x: jax.Array,       # bf16/f32 (M, K)
+    qvalue: jax.Array,  # int8 (K/2, N) packed
+    scale: jax.Array,   # f32 (K/g, N)
+    *,
+    group_size: int,
+) -> jax.Array:
+    """Marlin-analog oracle: in-register dequant then fp GEMM, f32 accum."""
+    M, K = x.shape
+    w = unpack_int4(qvalue)
+    N = w.shape[1]
+    G = K // group_size
+    wd = (w.reshape(G, group_size, N).astype(jnp.float32)
+          * scale[:, None, :]).reshape(K, N)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), wd.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )

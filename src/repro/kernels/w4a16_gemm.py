@@ -1,0 +1,95 @@
+"""Marlin-analog Pallas kernel: fine-grained W4A16 weight-only GEMM.
+
+The paper benchmarks against Marlin's W4A16 (Fig. 1/5, Table 6). Marlin's
+CUDA tricks (async copy, ldmatrix interleave, stream-K) don't transfer;
+the TPU-idiomatic equivalent is: nibble-packed int4 weights streamed
+HBM->VMEM (4x less weight bandwidth than bf16 — the entire point of
+weight-only quant in the memory-bound decode regime), dequantized in-VMEM
+to bf16 with the per-group float scale, then bf16 MXU matmul with f32
+accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .w4a8_gemm import _cdiv, _round_up, _snap_block, _unpack_wblock
+
+
+def _kernel(x_ref, wp_ref, s_ref, o_ref, facc_ref, *,
+            nk: int, gs: int, groups_per_blk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        facc_ref[...] = jnp.zeros_like(facc_ref)
+
+    wfull = _unpack_wblock(wp_ref[...], gs * groups_per_blk)
+    facc = facc_ref[...]
+    for gi in range(groups_per_blk):
+        xg = x_ref[:, gi * gs:(gi + 1) * gs]  # (bm, gs) bf16
+        wg = wfull[gi * gs:(gi + 1) * gs, :]  # (gs, bn) int8
+        wd = (wg.astype(jnp.float32) * s_ref[gi, :][None, :]).astype(
+            jnp.bfloat16
+        )
+        facc = facc + jax.lax.dot_general(
+            xg, wd, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    facc_ref[...] = facc
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = facc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def w4a16_gemm(
+    x: jax.Array,      # bf16 (M, K)
+    qvalue: jax.Array, # int8 (K/2, N) packed
+    scale: jax.Array,  # f32 (K/g, N)
+    *,
+    group_size: int = 128,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    M, K = x.shape
+    N = qvalue.shape[1]
+    gs = group_size
+    bm = min(bm, _round_up(M, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), gs)
+    if bk % gs:
+        bk = gs
+    nk = K // bk
+    groups_per_blk = bk // gs
+
+    Mp = _round_up(M, bm)
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, gs=gs,
+                          groups_per_blk=groups_per_blk, out_dtype=out_dtype),
+        grid=(Mp // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((groups_per_blk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), qvalue, scale)
+    return out[:M]

@@ -1,0 +1,167 @@
+"""Flagship Pallas TPU kernel: fine-grained W4A8 GEMM with Integer Scale.
+
+Implements paper Eq. 2 / Table 2 "Ours":
+
+    C_g = A_g * W_g * s_g^INT + C_{g-1}     (all INT32, MXU + VPU)
+    O   = FLOAT(C_G) * s_a / alpha          (ONE convert per output tile)
+
+TPU adaptation (see DESIGN.md §2/§4):
+  * per-group int8 x int8 -> int32 matmuls run on the MXU
+    (``preferred_element_type=int32``), iterated over the K grid dimension;
+  * the per-group *integer* scale multiply + add stays on VPU int32 lanes —
+    no I32->F32 convert inside the loop (that is the float-scale
+    bottleneck this kernel removes);
+  * int4 weights are nibble-packed along K with a group-local (lo, hi)
+    layout (``repro.core.packing``) so unpack = 2 shift pairs + one
+    sublane-dim concat; no gathers/lane shuffles;
+  * int32 accumulator lives in VMEM scratch across the K grid;
+  * BlockSpec tiles default to (bm=128, bn=256, bk=512): MXU-aligned
+    (multiples of 128 on the contraction/lane dims), VMEM footprint
+    ~0.4 MB << 16 MB so the pipeline can double-buffer.
+
+Weight-bit generality: the same kernel body serves W8A8 (``w_bits=8``,
+no unpack) — Integer Scale is bit-width agnostic (paper §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+LAYOUT_UNIT = 128  # must match repro.core.packing.LAYOUT_UNIT
+
+
+def _unpack_wblock(wp: jax.Array, bk: int) -> jax.Array:
+    """(bk/2, bn) packed int8 -> (bk, bn) int8, natural k-order.
+
+    The packing layout (repro.core.packing) stores, per 128-row unit, byte b
+    = (k=b | k=64+b << 4); unpack per unit is two shift pairs + one
+    sublane-dim concat — no permutation. Static unroll over units.
+    """
+    unit = LAYOUT_UNIT if bk % LAYOUT_UNIT == 0 else bk
+    h = unit // 2
+    parts = []
+    for u in range(bk // unit):
+        w32 = wp[u * h:(u + 1) * h, :].astype(jnp.int32)
+        lo = (w32 << 28) >> 28
+        hi = (w32 << 24) >> 28
+        parts.append(jnp.concatenate([lo, hi], axis=0))
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return out.astype(jnp.int8)
+
+
+def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, acc_ref, *,
+            nk: int, gs: int, groups_per_blk: int, w_bits: int,
+            alpha: float, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wfull = (_unpack_wblock(wp_ref[...], gs * groups_per_blk)
+             if w_bits == 4 else wp_ref[...])
+    acc = acc_ref[...]
+    for gi in range(groups_per_blk):  # static unroll over groups in block
+        xg = x_ref[:, gi * gs:(gi + 1) * gs]  # (bm, gs) int8
+        wg = wfull[gi * gs:(gi + 1) * gs, :]
+        part = jax.lax.dot_general(  # MXU int8 matmul, int32 out
+            xg, wg, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        # THE integer-scale step: stays in int32 — no convert in the loop.
+        acc = acc + part * s_ref[gi, :][None, :]
+    acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        # ONE I32->F32 convert per output tile; /alpha folded into s_a.
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * (sa_ref[...] * (1.0 / alpha))
+        ).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "alpha", "w_bits", "bm", "bn", "bk",
+                     "interpret", "out_dtype"),
+)
+def fg_gemm_integer_scale(
+    xq: jax.Array,        # int8 (M, K)
+    sa: jax.Array,        # f32 (M, 1) per-token scales
+    qvalue: jax.Array,    # int8 (K/2, N) packed (w4) | (K, N) (w8)
+    int_scale: jax.Array, # int32 (K/g, N)
+    *,
+    group_size: int = 128,
+    alpha: float = 1024.0,
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    M, K = xq.shape
+    N = qvalue.shape[1]
+    gs = group_size
+    if K % gs:
+        raise ValueError(f"K={K} % group={gs}")
+    bm = min(bm, _round_up(M, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), gs)
+    if bk % gs:
+        bk = gs  # block must hold whole groups
+    nk = K // bk
+    groups_per_blk = bk // gs
+
+    Mp = _round_up(M, bm)
+    if Mp != M:
+        xq = jnp.pad(xq, ((0, Mp - M), (0, 0)))
+        sa = jnp.pad(sa, ((0, Mp - M), (0, 0)))
+
+    pack = 2 if w_bits == 4 else 1
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, nk=nk, gs=gs, groups_per_blk=groups_per_blk,
+            w_bits=w_bits, alpha=alpha, out_dtype=out_dtype,
+        ),
+        grid=(Mp // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // pack, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((groups_per_blk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, qvalue, int_scale, sa)
+    return out[:M]
+
+
+def _snap_block(dim: int, blk: int, align: int) -> int:
+    """Largest divisor of ``dim`` that is <= blk and a multiple of
+    ``align`` (falling back to any divisor) — grids must tile exactly."""
+    blk = min(blk, dim)
+    if dim % blk == 0:
+        return blk
+    for cand in range(blk, 0, -1):
+        if dim % cand == 0 and cand % align == 0:
+            return cand
+    for cand in range(blk, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _cdiv(a, b) * b

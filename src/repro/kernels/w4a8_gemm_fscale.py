@@ -1,0 +1,116 @@
+"""Baseline Pallas kernel: fine-grained W4A8 GEMM with FLOAT scales (Eq. 1).
+
+Identical structure to ``w4a8_gemm.py`` except the inner loop — which is the
+whole point. Per group it must
+    1. convert the int32 MXU partial to f32            (I32->F32, VPU)
+    2. FMA with the group's float scale into an f32 accumulator.
+That is ``K/group`` converts + f32 FMAs per output tile (paper Fig. 2b,
+Table 2 "Atom" column) versus ONE convert total for Integer Scale. Keeping
+the two kernels diff-minimal isolates the paper's claim structurally; the
+HLO op-count benchmark (benchmarks/kernel_latency.py) counts exactly this.
+
+Also serves coarse-grained W4A8/W8A8 (group_size=-1): the single per-channel
+scale is applied per K-block (mathematically identical since it is constant
+across groups) — this is the OdysseyLLM-style baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .w4a8_gemm import _cdiv, _round_up, _snap_block, _unpack_wblock
+
+
+def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, facc_ref, *,
+            nk: int, gs: int, groups_per_blk: int, w_bits: int,
+            coarse: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        facc_ref[...] = jnp.zeros_like(facc_ref)
+
+    wfull = (_unpack_wblock(wp_ref[...], gs * groups_per_blk)
+             if w_bits == 4 else wp_ref[...])
+    facc = facc_ref[...]
+    for gi in range(groups_per_blk):
+        xg = x_ref[:, gi * gs:(gi + 1) * gs]
+        wg = wfull[gi * gs:(gi + 1) * gs, :]
+        part = jax.lax.dot_general(
+            xg, wg, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        s = s_ref[0, :] if coarse else s_ref[gi, :]
+        # THE float-scale bottleneck: per-group convert + f32 FMA.
+        facc = facc + part.astype(jnp.float32) * s[None, :]
+    facc_ref[...] = facc
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = (facc_ref[...] * sa_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "w_bits", "bm", "bn", "bk", "interpret",
+                     "out_dtype"),
+)
+def fg_gemm_float_scale(
+    xq: jax.Array,     # int8 (M, K)
+    sa: jax.Array,     # f32 (M, 1)
+    qvalue: jax.Array, # int8 (K/2, N) packed (w4) | (K, N) (w8)
+    scale: jax.Array,  # f32 (K/g, N) fine | (1, N) coarse
+    *,
+    group_size: int = 128,  # -1 => coarse
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    M, K = xq.shape
+    N = qvalue.shape[1]
+    coarse = group_size <= 0
+    gs = K if coarse else group_size
+    bm = min(bm, _round_up(M, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), 1 if coarse else gs)
+    if not coarse and bk % gs:
+        bk = gs
+    if coarse:
+        gs = bk  # treat each K-block as one "group" with the constant scale
+    nk = K // bk
+    groups_per_blk = bk // gs
+
+    Mp = _round_up(M, bm)
+    if Mp != M:
+        xq = jnp.pad(xq, ((0, Mp - M), (0, 0)))
+        sa = jnp.pad(sa, ((0, Mp - M), (0, 0)))
+
+    pack = 2 if w_bits == 4 else 1
+    s_rows = 1 if coarse else groups_per_blk
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, nk=nk, gs=gs, groups_per_blk=groups_per_blk,
+            w_bits=w_bits, coarse=coarse, out_dtype=out_dtype,
+        ),
+        grid=(Mp // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // pack, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((s_rows, bn),
+                         (lambda i, j, k: (0, j)) if coarse
+                         else (lambda i, j, k: (k, j))),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xq, qvalue, scale, sa)
+    return out[:M]

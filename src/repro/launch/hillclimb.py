@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first two lines — see dryrun.py.
+
+"""§Perf hillclimb driver: baseline + optimized variants for the three
+selected cells, each re-lowered on the production mesh with the change
+verified in the compiled HLO (dtype of collectives, memory_analysis,
+convert counts), alongside analytic before/after roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb
+
+Writes results/hillclimb.json consumed by EXPERIMENTS.md §Perf.
+"""
+import dataclasses
+import json
+import re
+import time
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shard
+from repro.launch.dryrun import parse_collectives, run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import moe
+
+
+def serve_rules_dp_seq():
+    """xlstm variant: weights fully replicated (1.3B int4 fits per chip);
+    activations sharded batch->data, seq->model -> zero TP all-reduces on
+    the projection path; the mLSTM chunk recurrence is the only cross-seq
+    dependency left."""
+    return (
+        ("embed", None), ("mlp", None), ("mlp2", None), ("moe_mlp", None),
+        ("heads_q", None), ("heads_kv", None), ("q_lora", None),
+        ("kv_lora", None), ("vocab", None), ("experts", None),
+        ("layers", None), ("cache_batch", "data"), ("cache_seq", None),
+    )
+
+
+CELLS = [
+    {
+        "cell": ("qwen2-72b", "decode_32k"),
+        "why": "most representative of the paper's technique: the "
+               "quantized W4A8-IS serving step, memory-bound",
+        "variants": [
+            ("baseline-w4a8-is-bf16kv", {}, {}),
+            ("int8-kv-cache", {"cfg_overrides": {"kv_cache_dtype": "int8"}},
+             {"hypothesis": "KV reads dominate (5.4 of 7.9 GB/chip); int8 "
+                            "KV halves them -> step 9.6->6.4ms (1.5x)"}),
+        ],
+    },
+    {
+        "cell": ("deepseek-v2-236b", "train_4k"),
+        "why": "most collective-bound cell (tx 20.9s vs tc 3.7s): MoE "
+               "all-to-all + TP all-reduces + FSDP gathers",
+        "variants": [
+            ("baseline-fsdp-tp-ep", {}, {}),
+            ("int8-moe-dispatch",
+             {"cfg_overrides": {"moe_int8_dispatch": True},
+              "dispatch_sharding": True},
+             {"hypothesis": "dispatch a2a carries bf16 (12.2s of tx); "
+                            "int8 transport halves it -> tx 20.9->14.8s"}),
+        ],
+    },
+    {
+        "cell": ("xlstm-1.3b", "prefill_32k"),
+        "why": "worst roofline fraction (0.044): collective-bound TP "
+               "serving of a small recurrent model + 32768-step scan",
+        "variants": [
+            ("baseline-tp-scan", {}, {}),
+            ("chunked-mlstm",
+             {"cfg_overrides": {"mlstm_impl": "chunked",
+                                "chunk_size": 256}},
+             {"hypothesis": "chunkwise-parallel cell cuts sequential "
+                            "depth 32768->128; terms unchanged, latency "
+                            "bound (not in 3-term model) collapses"}),
+            ("chunked+replicated-weights",
+             {"cfg_overrides": {"mlstm_impl": "chunked",
+                                "chunk_size": 256},
+              "rules": serve_rules_dp_seq(),
+              "token_sharding": P("data", "model")},
+             {"hypothesis": "weights replicated (0.75 GiB int4/chip) + "
+                            "tokens sharded over all 256 chips -> TP "
+                            "all-reduces (483ms) vanish; leftover "
+                            "collectives only from the chunk-state chain"}),
+        ],
+    },
+]
+
+
+def scan_trip_info(hlo: str) -> list[int]:
+    """Trip counts of while loops (from constant comparisons) — evidence
+    for the sequential-depth claims."""
+    # XLA encodes trip counts in while conditions like s32[] constant(128)
+    out = [int(m) for m in re.findall(
+        r"while.*?trip_count=(\d+)", hlo)]
+    if not out:
+        out = [int(m) for m in re.findall(
+            r'known_trip_count=\{"n":"(\d+)"\}', hlo)]
+    return sorted(out, reverse=True)[:8]
+
+
+def main() -> None:
+    assert len(jax.devices()) == 512
+    mesh = make_production_mesh(multi_pod=False)
+    results = []
+    for spec in CELLS:
+        arch, shape = spec["cell"]
+        for name, opts, meta in spec["variants"]:
+            if opts.get("dispatch_sharding"):
+                moe.set_dispatch_sharding(
+                    NamedSharding(mesh, P("data", "model", None, None)),
+                    NamedSharding(mesh, P("data", "model", None, None)))
+            else:
+                moe._DISPATCH_SHARDING = None
+            t0 = time.time()
+            rec = run_cell(
+                arch, shape, mesh, False,
+                cfg_overrides=opts.get("cfg_overrides"),
+                rules=opts.get("rules"),
+                token_sharding=opts.get("token_sharding"))
+            rec.update(variant=name, cell_why=spec["why"], **meta)
+            # extra HLO evidence: int8 collectives + loop trip counts
+            results.append(rec)
+            msg = rec["status"]
+            if rec["status"] == "ok":
+                gb = rec["memory"]["argument_bytes"] / 2**30
+                cw = rec.get("collectives", {}).get("total_wire_bytes", 0)
+                msg = (f"args/dev={gb:.2f}GiB wire/dev={cw/2**30:.3f}GiB "
+                       f"converts={rec.get('hlo_convert_count')}")
+            print(f"[hillclimb] {arch}/{shape} :: {name}: {msg} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    os.makedirs("results", exist_ok=True)
+    with open("results/hillclimb.json", "w") as f:
+        json.dump(results, f, indent=1)
+    errs = [r for r in results if r["status"] != "ok"]
+    if errs:
+        for e in errs:
+            print("ERROR:", e["arch"], e["shape"], e.get("variant"),
+                  e.get("error"))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,528 @@
+"""Attention variants: chunked-flash GQA/MQA, MLA (latent KV), cross-attn.
+
+All softmax attention goes through :func:`flash_attention` — a lax.scan
+online-softmax over KV chunks (and a map over Q chunks) so that 32k-token
+prefill never materializes an S^2 score tensor. Supports causal masks,
+sliding windows (recurrentgemma local attention) and int8-quantized KV
+(beyond-paper QServe-inspired option).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import spec as S
+from .common import apply_linear, linear, rmsnorm, rmsnorm_spec
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2) f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (S, D/2) or (B, S, D/2)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch/heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, D/2)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (online softmax, scan over KV chunks)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(D))
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to chunk multiples (mask handles the tail)
+    Sqp = -(-Sq // q_chunk) * q_chunk
+    Skp = -(-Sk // kv_chunk) * kv_chunk
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    qg = q.reshape(B, Sqp, Hkv, G, D)
+    nq, nk = Sqp // q_chunk, Skp // kv_chunk
+
+    def q_block(qi):
+        qch = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, 1)
+        qch = qch.astype(jnp.float32) * scale
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kch = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vch = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qch, kch.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = k_pos[None, :] < Sk  # padding mask
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vch.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, Hkv, G, q_chunk, Dv)
+
+    if nq == 1:
+        out = q_block(0)[:, :, :, None]  # (B,Hkv,G,1,qc,Dv)
+    else:
+        out = jax.lax.map(q_block, jnp.arange(nq))  # (nq,B,Hkv,G,qc,Dv)
+        out = jnp.moveaxis(out, 0, 3)
+    out = out.reshape(B, Hkv, G, Sqp, Dv).transpose(0, 3, 1, 2, 4)
+    out = out.reshape(B, Sqp, Hq, Dv)[:, :Sq]
+    return out.astype(v.dtype if v.dtype != jnp.int8 else jnp.bfloat16)
+
+
+def decode_attention(
+    q: jax.Array,       # (B, 1, Hq, D)
+    k_cache: jax.Array, # (B, Smax, Hkv, D)   (may be int8)
+    v_cache: jax.Array, # (B, Smax, Hkv, Dv)
+    length: jax.Array,  # () int32 — valid prefix length (inclusive of new tok)
+    *,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (B, Smax, Hkv, 1) if int8 KV
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Single-step attention over a (possibly int8) KV cache."""
+    B, Smax, Hkv, D = k_cache.shape
+    Dv = v_cache.shape[-1]
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale or (1.0 / math.sqrt(D))
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale.astype(jnp.float32)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kf,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(Smax)
+    lens = jnp.reshape(jnp.asarray(length), (-1, 1))  # scalar or per-slot (B,)
+    mask = pos[None, :] < lens
+    if window is not None:
+        mask &= pos[None, :] > lens - 1 - window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dv)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization helpers (int8 per-token-per-head absmax)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array):
+    """(B, S, H, D) -> int8 codes + (B, S, H, 1) f32 scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention module
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    return {
+        "q": linear(recipe, f"{base}/q", d, Hq * hd, ("embed", "heads_q"),
+                    bias=cfg.qkv_bias, dtype=dt),
+        "k": linear(recipe, f"{base}/k", d, Hkv * hd, ("embed", "heads_kv"),
+                    bias=cfg.qkv_bias, dtype=dt),
+        "v": linear(recipe, f"{base}/v", d, Hkv * hd, ("embed", "heads_kv"),
+                    bias=cfg.qkv_bias, dtype=dt),
+        "o": linear(recipe, f"{base}/o", Hq * hd, d, ("heads_q", "embed"),
+                    dtype=dt),
+    }
+
+
+def gqa_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    hd, Hkv = cfg.head_dim, cfg.num_kv_heads
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": S.zeros((batch, max_seq, Hkv, hd),
+                         ("cache_batch", "cache_seq", "heads_kv", None),
+                         dtype=jnp.int8),
+            "v": S.zeros((batch, max_seq, Hkv, hd),
+                         ("cache_batch", "cache_seq", "heads_kv", None),
+                         dtype=jnp.int8),
+            "k_scale": S.zeros((batch, max_seq, Hkv, 1),
+                               ("cache_batch", "cache_seq", "heads_kv", None),
+                               dtype=jnp.float32),
+            "v_scale": S.zeros((batch, max_seq, Hkv, 1),
+                               ("cache_batch", "cache_seq", "heads_kv", None),
+                               dtype=jnp.float32),
+        }
+    dt = cfg.activation_dtype
+    return {
+        "k": S.zeros((batch, max_seq, Hkv, hd),
+                     ("cache_batch", "cache_seq", "heads_kv", None), dtype=dt),
+        "v": S.zeros((batch, max_seq, Hkv, hd),
+                     ("cache_batch", "cache_seq", "heads_kv", None), dtype=dt),
+    }
+
+
+def _is_vec_pos(pos) -> bool:
+    return getattr(pos, "ndim", 0) == 1
+
+
+def _cache_write(cache_arr: jax.Array, val: jax.Array, pos) -> jax.Array:
+    """Write (B, S_new, ...) at offset ``pos`` — scalar offset (aligned
+    batch) or per-slot (B,) vector (continuous batching; S_new must be 1)."""
+    if _is_vec_pos(pos):
+        b = jnp.arange(val.shape[0])
+        return cache_arr.at[b, pos].set(val[:, 0].astype(cache_arr.dtype))
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, val.astype(cache_arr.dtype), pos, axis=1)
+
+
+def _store_kv(cfg: ModelConfig, cache: dict, k, v, pos) -> dict:
+    """Write new k/v (B, S_new, Hkv, D) into the cache at offset pos."""
+    new = dict(cache)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        for name, val in (("k", kq), ("v", vq), ("k_scale", ks),
+                          ("v_scale", vs)):
+            new[name] = _cache_write(cache[name], val, pos)
+    else:
+        for name, val in (("k", k), ("v", v)):
+            new[name] = _cache_write(cache[name], val, pos)
+    return new
+
+
+def gqa_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    recipe,
+    base: str,
+    *,
+    mode: str = "train",           # train | prefill | decode
+    cache: dict | None = None,
+    pos=0,                         # int32 scalar: tokens already in cache
+    window: int | None = None,
+):
+    B, Sq, d = x.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = apply_linear(recipe, f"{base}/q", params["q"], x).reshape(B, Sq, Hq, hd)
+    k = apply_linear(recipe, f"{base}/k", params["k"], x).reshape(B, Sq, Hkv, hd)
+    v = apply_linear(recipe, f"{base}/v", params["v"], x).reshape(B, Sq, Hkv, hd)
+
+    if _is_vec_pos(pos):
+        positions = pos[:, None] + jnp.arange(Sq)[None, :]  # (B, Sq)
+    else:
+        positions = pos + jnp.arange(Sq)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if mode == "decode":
+        cache = _store_kv(cfg, cache, k, v, pos)
+        out = decode_attention(
+            q, cache["k"], cache["v"], pos + Sq, window=window,
+            k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+        ).astype(x.dtype)
+    else:
+        if cache is not None:  # prefill: also populate the cache
+            cache = _store_kv(cfg, cache, k, v, pos)
+        if cfg.attention_impl.startswith("pallas"):
+            from repro.kernels.flash_attention import flash_attention_tpu
+
+            out = flash_attention_tpu(
+                q, k, v, causal=True, window=window,
+                interpret=(cfg.attention_impl == "pallas_interpret"),
+            ).astype(x.dtype)
+        else:
+            out = flash_attention(
+                q, k, v, causal=True, window=window,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            ).astype(x.dtype)
+
+    out = out.reshape(B, Sq, Hq * hd)
+    y = apply_linear(recipe, f"{base}/o", params["o"], out)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention — DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    r, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    dt = cfg.activation_dtype
+    out: dict = {}
+    if cfg.q_lora_rank:
+        out["q_down"] = linear(recipe, f"{base}/q_down", d, cfg.q_lora_rank,
+                               ("embed", "q_lora"), dtype=dt)
+        out["q_norm"] = rmsnorm_spec(cfg.q_lora_rank)
+        q_in = cfg.q_lora_rank
+    else:
+        q_in = d
+    out["q_up"] = linear(recipe, f"{base}/q_up", q_in, H * (nd + r),
+                         ("q_lora", "heads_q"), dtype=dt)
+    out["kv_down"] = linear(recipe, f"{base}/kv_down", d,
+                            cfg.kv_lora_rank + r, ("embed", "kv_lora"),
+                            dtype=dt)
+    out["kv_norm"] = rmsnorm_spec(cfg.kv_lora_rank)
+    out["k_up"] = linear(recipe, f"{base}/k_up", cfg.kv_lora_rank, H * nd,
+                         ("kv_lora", "heads_q"), dtype=dt)
+    out["v_up"] = linear(recipe, f"{base}/v_up", cfg.kv_lora_rank, H * vd,
+                         ("kv_lora", "heads_q"), dtype=dt)
+    out["o"] = linear(recipe, f"{base}/o", H * vd, d, ("heads_q", "embed"),
+                      dtype=dt)
+    return out
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """The latent cache: c_kv (+ rope'd shared key) — the whole point of MLA."""
+    dt = cfg.activation_dtype
+    return {
+        "c_kv": S.zeros((batch, max_seq, cfg.kv_lora_rank),
+                        ("cache_batch", "cache_seq", "kv_lora"), dtype=dt),
+        "k_rope": S.zeros((batch, max_seq, cfg.qk_rope_dim),
+                          ("cache_batch", "cache_seq", None), dtype=dt),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, recipe, base, positions):
+    """Shared projections: returns per-head q (nope+rope) and latent (c, kr)."""
+    B, Sq, _ = x.shape
+    H = cfg.num_heads
+    r, nd = cfg.qk_rope_dim, cfg.qk_nope_dim
+    if cfg.q_lora_rank:
+        cq = apply_linear(recipe, f"{base}/q_down", params["q_down"], x)
+        cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+    else:
+        cq = x
+    q = apply_linear(recipe, f"{base}/q_up", params["q_up"], cq)
+    q = q.reshape(B, Sq, H, nd + r)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    ckv = apply_linear(recipe, f"{base}/kv_down", params["kv_down"], x)
+    c_kv, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, r, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    recipe,
+    base: str,
+    *,
+    mode: str = "train",
+    cache: dict | None = None,
+    pos=0,
+):
+    B, Sq, d = x.shape
+    H = cfg.num_heads
+    r, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    if _is_vec_pos(pos):
+        positions = pos[:, None] + jnp.arange(Sq)[None, :]
+    else:
+        positions = pos + jnp.arange(Sq)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(
+        params, x, cfg, recipe, base, positions)
+
+    if cache is not None:  # store the LATENT cache
+        cache = dict(cache)
+        cache["c_kv"] = _cache_write(cache["c_kv"], c_kv, pos)
+        cache["k_rope"] = _cache_write(cache["k_rope"], k_rope, pos)
+
+    if mode == "decode":
+        # Absorbed-matrix decode: never materialize per-head K/V.
+        # score = (W_uk^T q_nope) . c_kv + q_rope . k_rope
+        k_up = _dense_weight(params["k_up"], recipe, f"{base}/k_up",
+                             cfg.kv_lora_rank, cfg.activation_dtype)
+        v_up = _dense_weight(params["v_up"], recipe, f"{base}/v_up",
+                             cfg.kv_lora_rank, cfg.activation_dtype)
+        k_up = k_up.reshape(cfg.kv_lora_rank, H, nd)
+        v_up = v_up.reshape(cfg.kv_lora_rank, H, vd)
+        q_eff = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                           k_up.astype(jnp.float32))
+        ckv_f = cache["c_kv"].astype(jnp.float32)
+        kr_f = cache["k_rope"].astype(jnp.float32)
+        s = (jnp.einsum("bqhc,bsc->bhqs", q_eff, ckv_f)
+             + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr_f))
+        s = s / math.sqrt(nd + r)
+        lens = jnp.reshape(jnp.asarray(pos) + Sq, (-1, 1))
+        mask = jnp.arange(cache["c_kv"].shape[1])[None, :] < lens
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx_c = jnp.einsum("bhqs,bsc->bqhc", p, ckv_f)
+        out = jnp.einsum("bqhc,chv->bqhv", ctx_c,
+                         v_up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        # prefill/train: materialize per-head K/V from the latent, flash-attend
+        k_nope = apply_linear(recipe, f"{base}/k_up", params["k_up"], c_kv)
+        k_nope = k_nope.reshape(B, Sq, H, nd)
+        v = apply_linear(recipe, f"{base}/v_up", params["v_up"], c_kv)
+        v = v.reshape(B, Sq, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Sq, H, r))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = flash_attention(
+            q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            softmax_scale=1.0 / math.sqrt(nd + r),
+        ).astype(x.dtype)
+
+    out = out.reshape(B, Sq, H * vd)
+    y = apply_linear(recipe, f"{base}/o", params["o"], out)
+    return y, cache
+
+
+def _dense_weight(params: dict, recipe, path: str, K: int, dtype):
+    """Reconstruct a bf16 weight from (possibly quantized) linear params for
+    einsum-style uses (MLA weight absorption). Weight-only-equivalent."""
+    qspec = recipe.spec_for(path) if recipe is not None else None
+    if qspec is None:
+        return params["w"]
+    from repro.core.qlinear import _unpack
+
+    wq = _unpack(params, qspec, K)
+    N = wq.shape[1]
+    gs = qspec.group_size if qspec.group_size > 0 else K
+    G = K // gs
+    scale = params["scale"].astype(jnp.float32)
+    if "alpha" in params:
+        scale = scale / params["alpha"]
+    w = wq.reshape(G, gs, N).astype(jnp.float32) * scale[:, None, :]
+    return w.reshape(K, N).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM image layers / whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    return {
+        "q": linear(recipe, f"{base}/q", d, Hq * hd, ("embed", "heads_q"),
+                    dtype=dt),
+        "k": linear(recipe, f"{base}/k", d, Hkv * hd, ("embed", "heads_kv"),
+                    dtype=dt),
+        "v": linear(recipe, f"{base}/v", d, Hkv * hd, ("embed", "heads_kv"),
+                    dtype=dt),
+        "o": linear(recipe, f"{base}/o", Hq * hd, d, ("heads_q", "embed"),
+                    dtype=dt),
+        "q_norm": rmsnorm_spec(d),
+    }
+
+
+def cross_attn_cache_specs(cfg: ModelConfig, batch: int, mem_len: int) -> dict:
+    hd, Hkv = cfg.head_dim, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    return {
+        "k": S.zeros((batch, mem_len, Hkv, hd),
+                     ("cache_batch", None, "heads_kv", None), dtype=dt),
+        "v": S.zeros((batch, mem_len, Hkv, hd),
+                     ("cache_batch", None, "heads_kv", None), dtype=dt),
+    }
+
+
+def cross_attn_apply(
+    params: dict,
+    x: jax.Array,          # (B, Sq, d)
+    cfg: ModelConfig,
+    recipe,
+    base: str,
+    *,
+    memory: jax.Array | None = None,  # (B, Sm, d) — prefill/train
+    cache: dict | None = None,
+    mode: str = "train",
+):
+    B, Sq, d = x.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    xq = rmsnorm(params["q_norm"], x, cfg.norm_eps)
+    q = apply_linear(recipe, f"{base}/q", params["q"], xq)
+    q = q.reshape(B, Sq, Hq, hd)
+    if mode == "decode":
+        k = cache["k"].astype(x.dtype)
+        v = cache["v"].astype(x.dtype)
+    else:
+        k = apply_linear(recipe, f"{base}/k", params["k"], memory)
+        v = apply_linear(recipe, f"{base}/v", params["v"], memory)
+        Sm = memory.shape[1]
+        k = k.reshape(B, Sm, Hkv, hd)
+        v = v.reshape(B, Sm, Hkv, hd)
+        if cache is not None:
+            cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype)}
+    out = flash_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk).astype(x.dtype)
+    out = out.reshape(B, Sq, Hq * hd)
+    y = apply_linear(recipe, f"{base}/o", params["o"], out)
+    return y, cache

@@ -1,0 +1,134 @@
+"""Unified model configuration covering every assigned architecture family.
+
+One frozen dataclass; families toggle feature blocks. Exact per-arch values
+live in ``repro/configs/<arch>.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+Family = Literal["dense", "moe", "vlm", "ssm", "hybrid", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # -- attention ----------------------------------------------------------
+    attention: Literal["gqa", "mla", "none"] = "gqa"
+    qkv_bias: bool = False  # qwen2 uses bias on QKV
+    rope_theta: float = 10_000.0
+    q_chunk: int = 512      # flash-attention chunk sizes
+    kv_chunk: int = 1024
+    # "jax" = chunked-scan flash (always available; dry-run path);
+    # "pallas" = fused TPU kernel (kernels/flash_attention.py);
+    # "pallas_interpret" = same kernel, CPU-validated
+    attention_impl: str = "jax"
+
+    # -- MLA (minicpm3 / deepseek-v2) ----------------------------------------
+    q_lora_rank: int = 0     # 0 -> direct q projection
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # -- MoE ------------------------------------------------------------------
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0     # leading dense blocks (deepseek-v2: 1)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    dispatch_groups: int = 1        # set = data-axis size under pjit
+    moe_int8_dispatch: bool = False  # compress the dispatch all-to-all
+
+    # -- VLM (llama-3.2-vision) ----------------------------------------------
+    cross_attn_every: int = 0       # every k-th layer is cross-attention
+    num_image_tokens: int = 0
+
+    # -- hybrid (recurrentgemma / griffin) ------------------------------------
+    block_pattern: tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    window: int = 2048                   # local-attention window
+    conv_width: int = 4
+    lru_c: float = 8.0
+
+    # -- xlstm -----------------------------------------------------------------
+    slstm_every: int = 8            # every k-th block is sLSTM (7:1 ratio)
+    mlstm_proj_factor: float = 2.0
+    chunk_size: int = 256           # mLSTM chunkwise-parallel chunk
+    mlstm_impl: str = "scan"        # "scan" (exact recurrence) | "chunked"
+
+    # -- encoder-decoder (whisper) ---------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500         # stub frame-embedding count
+    max_positions: int = 32768      # learned-pos table (enc-dec decoder)
+
+    # -- norms / embeddings -----------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # -- execution ---------------------------------------------------------------
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"   # or "int8" (quantized KV, beyond-paper)
+    scan_layers: bool = True
+    remat: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_rep(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def param_count_estimate(self) -> int:
+        """Rough dense-equivalent parameter count (embeddings included)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.head_dim
+        if self.attention == "mla":
+            attn = (self.q_lora_rank or d) * self.num_heads * (
+                self.qk_nope_dim + self.qk_rope_dim) + d * (
+                self.kv_lora_rank + self.qk_rope_dim) + self.kv_lora_rank * (
+                self.num_heads * (self.qk_nope_dim + self.v_head_dim)) + (
+                self.num_heads * self.v_head_dim * d)
+            if self.q_lora_rank:
+                attn += d * self.q_lora_rank
+        else:
+            attn = d * (self.num_heads * hd) * 2 + d * (
+                self.num_kv_heads * hd) * 2
+        if self.num_experts:
+            ffn = 3 * d * self.moe_d_ff * (
+                self.num_experts + self.num_shared_experts)
+        else:
+            ffn = 3 * d * self.d_ff
+        return L * (attn + ffn) + 2 * V * d
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts) —
+        the N in MODEL_FLOPS = 6*N_active*D."""
+        if not self.num_experts:
+            return self.param_count_estimate()
+        full = self.param_count_estimate()
+        all_ffn = self.num_layers * 3 * self.d_model * self.moe_d_ff * (
+            self.num_experts + self.num_shared_experts)
+        act_ffn = self.num_layers * 3 * self.d_model * self.moe_d_ff * (
+            self.top_k + self.num_shared_experts)
+        return full - all_ffn + act_ffn

@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend STUBBED).
+
+Per the assignment, ``input_specs()`` provides precomputed frame embeddings
+(B, S_enc, d) — the mel-spectrogram conv stem is a stub. The transformer
+backbone is faithful: LayerNorm blocks, bidirectional encoder self-attn,
+causal decoder self-attn + cross-attn to the encoder output, GELU MLPs,
+sinusoidal encoder positions / learned decoder positions.
+
+Decode caches: decoder self KV + cross KV (computed once at prefill).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import spec as S
+from . import attention as A
+from .common import apply_linear, layernorm, layernorm_spec, linear, \
+    stack_specs
+from .config import ModelConfig
+
+
+def _attn_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H = cfg.num_heads
+    dt = cfg.activation_dtype
+    return {
+        "q": linear(recipe, f"{base}/q", d, H * hd, ("embed", "heads_q"),
+                    bias=True, dtype=dt),
+        "k": linear(recipe, f"{base}/k", d, H * hd, ("embed", "heads_kv"),
+                    dtype=dt),
+        "v": linear(recipe, f"{base}/v", d, H * hd, ("embed", "heads_kv"),
+                    bias=True, dtype=dt),
+        "o": linear(recipe, f"{base}/o", H * hd, d, ("heads_q", "embed"),
+                    bias=True, dtype=dt),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.activation_dtype
+    return {
+        "up": linear(recipe, f"{base}/up", d, f, ("embed", "mlp"),
+                     bias=True, dtype=dt),
+        "down": linear(recipe, f"{base}/down", f, d, ("mlp", "embed"),
+                       bias=True, dtype=dt),
+    }
+
+
+def _mlp_apply(p, x, cfg, recipe, base):
+    h = apply_linear(recipe, f"{base}/up", p["up"], x)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(recipe, f"{base}/down", p["down"], h)
+
+
+def _attend(p, xq, xkv, cfg: ModelConfig, recipe, base, *, causal,
+            cache=None, pos=0, mode="train", cross=False):
+    B, Sq, d = xq.shape
+    hd, H = cfg.head_dim, cfg.num_heads
+    q = apply_linear(recipe, f"{base}/q", p["q"], xq).reshape(B, Sq, H, hd)
+    if cross and mode == "decode":
+        k = cache["k"].astype(xq.dtype)
+        v = cache["v"].astype(xq.dtype)
+        out = A.flash_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        Skv = xkv.shape[1]
+        k = apply_linear(recipe, f"{base}/k", p["k"], xkv)
+        v = apply_linear(recipe, f"{base}/v", p["v"], xkv)
+        k = k.reshape(B, Skv, H, hd)
+        v = v.reshape(B, Skv, H, hd)
+        if cross:
+            if cache is not None:
+                cache = {"k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
+            out = A.flash_attention(q, k, v, causal=False,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk)
+        elif mode == "decode":
+            cache = dict(cache)
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            out = A.decode_attention(q, cache["k"], cache["v"], pos + Sq)
+        else:
+            if cache is not None:
+                cache = dict(cache)
+                cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+                cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            out = A.flash_attention(q, k, v, causal=causal,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk)
+    out = out.astype(xq.dtype).reshape(B, Sq, H * hd)
+    y = apply_linear(recipe, f"{base}/o", p["o"], out)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _enc_block_specs(cfg, recipe, base):
+    return {"ln1": layernorm_spec(cfg.d_model),
+            "attn": _attn_specs(cfg, recipe, f"{base}/attn"),
+            "ln2": layernorm_spec(cfg.d_model),
+            "mlp": _mlp_specs(cfg, recipe, f"{base}/mlp")}
+
+
+def _dec_block_specs(cfg, recipe, base):
+    return {"ln1": layernorm_spec(cfg.d_model),
+            "self": _attn_specs(cfg, recipe, f"{base}/self"),
+            "ln_x": layernorm_spec(cfg.d_model),
+            "cross": _attn_specs(cfg, recipe, f"{base}/cross"),
+            "ln2": layernorm_spec(cfg.d_model),
+            "mlp": _mlp_specs(cfg, recipe, f"{base}/mlp")}
+
+
+def param_specs(cfg: ModelConfig, recipe=None) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    dt = cfg.activation_dtype
+    ne = cfg.num_encoder_layers or cfg.num_layers
+    nd = cfg.num_layers
+    return {
+        "enc": {
+            "blocks": stack_specs(
+                _enc_block_specs(cfg, recipe, "enc/blocks"), ne),
+            "final_ln": layernorm_spec(d),
+        },
+        "dec": {
+            "embed": S.w((V, d), ("vocab", "embed"), dtype=dt, init="embed"),
+            "pos": S.w((cfg.max_positions, d), (None, "embed"), dtype=dt,
+                       scale=0.02),
+            "blocks": stack_specs(
+                _dec_block_specs(cfg, recipe, "dec/blocks"), nd),
+            "final_ln": layernorm_spec(d),
+        },
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    d, hd, H = cfg.d_model, cfg.head_dim, cfg.num_heads
+    dt = cfg.activation_dtype
+    nd = cfg.num_layers
+    ax = ("cache_batch", "cache_seq", "heads_kv", None)
+    axm = ("cache_batch", None, "heads_kv", None)
+    blk = {
+        "self": {
+            "k": S.zeros((batch, max_seq, H, hd), ax, dtype=dt),
+            "v": S.zeros((batch, max_seq, H, hd), ax, dtype=dt),
+        },
+        "cross": {
+            "k": S.zeros((batch, cfg.encoder_seq, H, hd), axm, dtype=dt),
+            "v": S.zeros((batch, cfg.encoder_seq, H, hd), axm, dtype=dt),
+        },
+    }
+    return {"blocks": stack_specs(blk, nd)}
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(S_: int, d: int):
+    pos = jnp.arange(S_, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, recipe=None):
+    """frames: (B, S_enc, d) stub embeddings -> encoder output (B, S_enc, d)."""
+    B, Se, d = frames.shape
+    x = frames.astype(cfg.activation_dtype)
+    x = x + _sinusoid(Se, d).astype(x.dtype)[None]
+    enc = params["enc"]
+
+    def body(xc, p_l):
+        h = layernorm(p_l["ln1"], xc, cfg.norm_eps)
+        h, _ = _attend(p_l["attn"], h, h, cfg, recipe, "enc/blocks/attn",
+                       causal=False)
+        xc = xc + h
+        h = layernorm(p_l["ln2"], xc, cfg.norm_eps)
+        xc = xc + _mlp_apply(p_l["mlp"], h, cfg, recipe, "enc/blocks/mlp")
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return layernorm(enc["final_ln"], x, cfg.norm_eps)
+
+
+def apply(params, cfg: ModelConfig, tokens, *, recipe=None, mode="train",
+          cache=None, pos=0, memory=None):
+    """memory = frame embeddings (train/prefill); decode uses cross cache."""
+    B, Sq = tokens.shape
+    dec = params["dec"]
+    enc_out = None
+    if mode != "decode":
+        enc_out = encode(params, cfg, memory, recipe)
+    x = dec["embed"].astype(cfg.activation_dtype)[tokens]
+    posn = pos + jnp.arange(Sq)
+    x = x + dec["pos"].astype(x.dtype)[posn][None]
+
+    def body(carry, inp):
+        xc = carry
+        if cache is not None:
+            p_l, c_l = inp
+        else:
+            p_l, c_l = inp, None
+        h = layernorm(p_l["ln1"], xc, cfg.norm_eps)
+        h, c_self = _attend(p_l["self"], h, h, cfg, recipe,
+                            "dec/blocks/self", causal=True,
+                            cache=(c_l["self"] if c_l else None),
+                            pos=pos, mode=mode)
+        xc = xc + h
+        h = layernorm(p_l["ln_x"], xc, cfg.norm_eps)
+        h, c_cross = _attend(p_l["cross"], h, enc_out, cfg, recipe,
+                             "dec/blocks/cross", causal=False,
+                             cache=(c_l["cross"] if c_l else None),
+                             mode=mode, cross=True)
+        xc = xc + h
+        h = layernorm(p_l["ln2"], xc, cfg.norm_eps)
+        xc = xc + _mlp_apply(p_l["mlp"], h, cfg, recipe, "dec/blocks/mlp")
+        out_c = {"self": c_self, "cross": c_cross} if c_l is not None else None
+        return xc, out_c
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (dec["blocks"], cache["blocks"]) if cache is not None \
+        else dec["blocks"]
+    x, scanned = jax.lax.scan(body, x, xs)
+    new_cache = {"blocks": scanned} if cache is not None else None
+    if mode == "prefill":
+        x = x[:, -1:]
+    x = layernorm(dec["final_ln"], x, cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ dec["embed"].astype(jnp.float32).T
+    return logits, new_cache, jnp.zeros((), jnp.float32)

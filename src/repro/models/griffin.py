@@ -1,0 +1,353 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Pattern (arXiv:2402.19427): temporal-mixing blocks cycle
+(recurrent, recurrent, local-attention) — the 1:2 attention:recurrence
+ratio — each followed by a GeGLU MLP block.
+
+RG-LRU:  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+         a_t = exp(-c * softplus(Lambda) * r_t)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+A *linear* recurrence -> ``jax.lax.associative_scan`` for train/prefill
+(log-depth), O(1) state for decode. Local attention uses a ring-buffer KV
+cache of exactly ``window`` slots, so the ``long_500k`` decode cell carries
+O(window + d_rnn) state, not O(S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import spec as S
+from . import attention as A
+from .common import apply_linear, linear, rmsnorm, rmsnorm_spec, stack_specs
+from .config import ModelConfig
+from .xlstm import causal_conv, conv_specs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def rglru_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d = cfg.d_model
+    dr = d  # d_rnn = d_model (Griffin)
+    dt = cfg.activation_dtype
+    return {
+        "ln": rmsnorm_spec(d),
+        "gate_proj": linear(recipe, f"{base}/gate_proj", d, dr,
+                            ("embed", "mlp"), dtype=dt),
+        "x_proj": linear(recipe, f"{base}/x_proj", d, dr, ("embed", "mlp"),
+                         dtype=dt),
+        "conv": conv_specs(dr, cfg.conv_width),
+        "lru": {
+            "lam": S.w((dr,), ("mlp",), init="ones"),  # softplus(lam) decay
+            "wa": S.w((dr, dr), ("mlp", "mlp2"), scale=0.5),
+            "ba": S.zeros((dr,), ("mlp",)),
+            "wi": S.w((dr, dr), ("mlp", "mlp2"), scale=0.5),
+            "bi": S.zeros((dr,), ("mlp",)),
+        },
+        "out_proj": linear(recipe, f"{base}/out_proj", dr, d,
+                           ("mlp", "embed"), dtype=dt),
+    }
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    dr = cfg.d_model
+    return {
+        "h": S.zeros((batch, dr), ("cache_batch", "mlp"), dtype=jnp.float32),
+        "conv": S.zeros((batch, cfg.conv_width - 1, dr),
+                        ("cache_batch", None, "mlp"),
+                        dtype=cfg.activation_dtype),
+    }
+
+
+def _lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative_scan (f32)."""
+    if h0 is not None:
+        # fold initial state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(params, x, cfg: ModelConfig, recipe, base: str, *,
+                state: dict | None = None):
+    B, Sq, d = x.shape
+    xi = rmsnorm(params["ln"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(
+        apply_linear(recipe, f"{base}/gate_proj", params["gate_proj"],
+                     xi).astype(jnp.float32))
+    xr = apply_linear(recipe, f"{base}/x_proj", params["x_proj"], xi)
+    conv_state = state["conv"] if state is not None else None
+    xr, conv_new = causal_conv(params["conv"], xr, state=conv_state)
+    lru = params["lru"]
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ lru["wa"].astype(jnp.float32)
+                       + lru["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ lru["wi"].astype(jnp.float32)
+                       + lru["bi"].astype(jnp.float32))
+    log_a = -cfg.lru_c * jax.nn.softplus(
+        lru["lam"].astype(jnp.float32)) * r  # (B,S,dr), <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) input normalization (Griffin eq. 5)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+    h = _lru_scan(a, b, h0)  # (B,S,dr)
+    y = (h * gate).astype(x.dtype)
+    y = apply_linear(recipe, f"{base}/out_proj", params["out_proj"], y)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1, :], "conv": conv_new}
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Local attention with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+
+def local_attn_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    return {"ln": rmsnorm_spec(cfg.d_model),
+            "attn": A.gqa_specs(cfg, recipe, f"{base}/attn")}
+
+
+def local_attn_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    hd, Hkv, W = cfg.head_dim, cfg.num_kv_heads, cfg.window
+    dt = cfg.activation_dtype
+    return {
+        "k": S.zeros((batch, W, Hkv, hd),
+                     ("cache_batch", "cache_seq", "heads_kv", None), dtype=dt),
+        "v": S.zeros((batch, W, Hkv, hd),
+                     ("cache_batch", "cache_seq", "heads_kv", None), dtype=dt),
+    }
+
+
+def local_attn_apply(params, x, cfg: ModelConfig, recipe, base: str, *,
+                     state: dict | None = None, pos=0, mode="train"):
+    B, Sq, d = x.shape
+    hd, Hq, Hkv, W = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.window
+    xi = rmsnorm(params["ln"], x, cfg.norm_eps)
+    p = params["attn"]
+    ab = f"{base}/attn"
+    q = apply_linear(recipe, f"{ab}/q", p["q"], xi).reshape(B, Sq, Hq, hd)
+    k = apply_linear(recipe, f"{ab}/k", p["k"], xi).reshape(B, Sq, Hkv, hd)
+    v = apply_linear(recipe, f"{ab}/v", p["v"], xi).reshape(B, Sq, Hkv, hd)
+    positions = pos + jnp.arange(Sq)
+    cos, sin = A.rope_cos_sin(positions, hd, cfg.rope_theta)
+    q = A.apply_rope(q, cos, sin)
+    k = A.apply_rope(k, cos, sin)
+
+    if mode == "decode":
+        # ring-buffer write at slot pos % W
+        slot = jnp.mod(pos, W)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], k.astype(state["k"].dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], v.astype(state["v"].dtype), slot, axis=1)
+        state = {"k": kc, "v": vc}
+        # slot s holds absolute position p_s = pos - ((pos - s) mod W)
+        s_idx = jnp.arange(W)
+        p_s = pos - jnp.mod(pos - s_idx, W)
+        valid = p_s >= 0  # all within-window by construction
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        qg = q.reshape(B, Hkv, Hq // Hkv, hd).astype(jnp.float32)
+        qg = qg / jnp.sqrt(jnp.float32(hd))
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, kf)
+        s = jnp.where(valid[None, None, None], s, A.NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgs,bshd->bhgd", pr, vf)
+        out = out.reshape(B, 1, Hq, hd).astype(x.dtype)
+    else:
+        out = A.flash_attention(
+            q, k, v, causal=True, window=W,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk).astype(x.dtype)
+        if state is not None:  # prefill: keep last W tokens, ring layout
+            kc, vc = state["k"], state["v"]
+            take = min(W, Sq)
+            last_pos = pos + Sq - take + jnp.arange(take)
+            slots = jnp.mod(last_pos, W)
+
+            def put(c, val):
+                return c.at[:, slots].set(
+                    val[:, -take:].astype(c.dtype))
+
+            state = {"k": put(kc, k), "v": put(vc, v)}
+    out = out.reshape(B, Sq, Hq * hd)
+    y = apply_linear(recipe, f"{ab}/o", p["o"], out)
+    return x + y, state
+
+
+# ---------------------------------------------------------------------------
+# MLP (GeGLU) block
+# ---------------------------------------------------------------------------
+
+
+def mlp_block_specs(cfg: ModelConfig, recipe, base: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.activation_dtype
+    return {
+        "ln": rmsnorm_spec(d),
+        "gate": linear(recipe, f"{base}/gate", d, f, ("embed", "mlp"),
+                       dtype=dt),
+        "up": linear(recipe, f"{base}/up", d, f, ("embed", "mlp"), dtype=dt),
+        "down": linear(recipe, f"{base}/down", f, d, ("mlp", "embed"),
+                       dtype=dt),
+    }
+
+
+def mlp_block_apply(params, x, cfg, recipe, base):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    g = apply_linear(recipe, f"{base}/gate", params["gate"], h)
+    u = apply_linear(recipe, f"{base}/up", params["up"], h)
+    y = apply_linear(recipe, f"{base}/down", params["down"],
+                     jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u)
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    pat = list(cfg.block_pattern) or ["rec", "rec", "attn"]
+    kinds = []
+    i = 0
+    while len(kinds) < cfg.num_layers:
+        kinds.append(pat[i % len(pat)])
+        i += 1
+    return kinds
+
+
+def _split(cfg: ModelConfig):
+    from .transformer import split_layers
+
+    kinds = layer_kinds(cfg)
+    # prefer scanning full patterns; leftover head becomes the prefix
+    pat_len = len(list(cfg.block_pattern) or ["rec", "rec", "attn"])
+    rem = cfg.num_layers % pat_len
+    if rem:
+        return kinds[:rem], kinds[rem:rem + pat_len], \
+            (cfg.num_layers - rem) // pat_len
+    return split_layers(kinds, max_period=pat_len)
+
+
+def _block_specs(cfg, recipe, kind, base):
+    if kind == "rec":
+        return {"mix": rglru_specs(cfg, recipe, f"{base}/rglru"),
+                "mlp": mlp_block_specs(cfg, recipe, f"{base}/mlp")}
+    return {"mix": local_attn_specs(cfg, recipe, f"{base}/lattn"),
+            "mlp": mlp_block_specs(cfg, recipe, f"{base}/mlp")}
+
+
+def _block_state_specs(cfg, kind, batch):
+    if kind == "rec":
+        return rglru_state_specs(cfg, batch)
+    return local_attn_state_specs(cfg, batch)
+
+
+def _block_apply(p, x, cfg, recipe, kind, base, *, st, pos, mode):
+    if kind == "rec":
+        x, st = rglru_apply(p["mix"], x, cfg, recipe, f"{base}/rglru",
+                            state=st)
+    else:
+        x, st = local_attn_apply(p["mix"], x, cfg, recipe, f"{base}/lattn",
+                                 state=st, pos=pos, mode=mode)
+    x = mlp_block_apply(p["mlp"], x, cfg, recipe, f"{base}/mlp")
+    return x, st
+
+
+def param_specs(cfg: ModelConfig, recipe=None) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    dt = cfg.activation_dtype
+    prefix, pattern, R = _split(cfg)
+    specs: dict = {
+        # std 1/sqrt(d): the runtime x*sqrt(d) scaling (Gemma convention)
+        # then yields unit-RMS streams; std-1.0 init would saturate the
+        # logit softcap at init (tanh -> zero gradient).
+        "embed": S.w((V, d), ("vocab", "embed"), dtype=dt, init="embed",
+                     scale=d ** -0.5),
+        "final_norm": rmsnorm_spec(d),
+    }
+    if prefix:
+        specs["prefix"] = {str(i): _block_specs(cfg, recipe, k, f"prefix/{i}")
+                           for i, k in enumerate(prefix)}
+    if R:
+        pat = {f"s{j}": _block_specs(cfg, recipe, k, f"blocks/s{j}")
+               for j, k in enumerate(pattern)}
+        specs["blocks"] = stack_specs(pat, R)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    prefix, pattern, R = _split(cfg)
+    out: dict = {}
+    if prefix:
+        out["prefix"] = {str(i): _block_state_specs(cfg, k, batch)
+                         for i, k in enumerate(prefix)}
+    if R:
+        pat = {f"s{j}": _block_state_specs(cfg, k, batch)
+               for j, k in enumerate(pattern)}
+        out["blocks"] = stack_specs(pat, R)
+    return out
+
+
+def apply(params, cfg: ModelConfig, tokens, *, recipe=None, mode="train",
+          cache=None, pos=0, memory=None):
+    prefix, pattern, R = _split(cfg)
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    # RecurrentGemma scales embeddings by sqrt(d)
+    x = x * jnp.asarray(jnp.sqrt(jnp.float32(cfg.d_model)), x.dtype)
+    new_cache: dict | None = {} if cache is not None else None
+
+    if prefix:
+        if cache is not None:
+            new_cache["prefix"] = {}
+        for i, kind in enumerate(prefix):
+            st = cache["prefix"][str(i)] if cache is not None else None
+            x, st = _block_apply(params["prefix"][str(i)], x, cfg, recipe,
+                                 kind, f"prefix/{i}", st=st, pos=pos,
+                                 mode=mode)
+            if cache is not None:
+                new_cache["prefix"][str(i)] = st
+
+    if R:
+        def body(xc, inp):
+            if cache is not None:
+                p_l, c_l = inp
+            else:
+                p_l, c_l = inp, None
+            outs = {}
+            for j, kind in enumerate(pattern):
+                st = c_l[f"s{j}"] if c_l is not None else None
+                xc, st = _block_apply(p_l[f"s{j}"], xc, cfg, recipe, kind,
+                                      f"blocks/s{j}", st=st, pos=pos,
+                                      mode=mode)
+                if cache is not None:
+                    outs[f"s{j}"] = st
+            return xc, (outs if cache is not None else None)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = (params["blocks"], cache["blocks"]) if cache is not None \
+            else params["blocks"]
+        x, scanned = jax.lax.scan(body, x, xs)
+        if cache is not None:
+            new_cache["blocks"] = scanned
+
+    if mode == "prefill":
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["embed"].astype(jnp.float32).T
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, new_cache, jnp.zeros((), jnp.float32)

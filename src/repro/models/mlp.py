@@ -1,0 +1,36 @@
+"""Gated MLPs (SwiGLU / GeGLU) with recipe-aware quantized linears."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_linear, linear
+from .config import ModelConfig
+
+
+def mlp_specs(cfg: ModelConfig, recipe, base: str, d_ff: int | None = None,
+              activation: str = "silu") -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.activation_dtype
+    return {
+        "gate": linear(recipe, f"{base}/gate", d, f, ("embed", "mlp"), dtype=dt),
+        "up": linear(recipe, f"{base}/up", d, f, ("embed", "mlp"), dtype=dt),
+        "down": linear(recipe, f"{base}/down", f, d, ("mlp", "embed"), dtype=dt),
+    }
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, recipe,
+              base: str, activation: str = "silu") -> jax.Array:
+    g = apply_linear(recipe, f"{base}/gate", params["gate"], x)
+    u = apply_linear(recipe, f"{base}/up", params["up"], x)
+    h = _act(activation, g.astype(jnp.float32)).astype(x.dtype) * u
+    return apply_linear(recipe, f"{base}/down", params["down"], h)

@@ -1,0 +1,65 @@
+"""--arch <id> registry: family -> model implementation, uniform API.
+
+Every implementation exposes
+    param_specs(cfg, recipe) -> ParamSpec tree
+    cache_specs(cfg, batch, max_seq) -> ParamSpec tree (decode state)
+    apply(params, cfg, tokens, *, recipe, mode, cache, pos, memory)
+        -> (logits f32, new_cache, aux_loss)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    param_specs: Callable
+    cache_specs: Callable
+    apply: Callable
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = importlib.import_module("repro.models.transformer")
+    elif cfg.family == "ssm":
+        mod = importlib.import_module("repro.models.xlstm")
+    elif cfg.family == "hybrid":
+        mod = importlib.import_module("repro.models.griffin")
+    elif cfg.family == "audio":
+        mod = importlib.import_module("repro.models.encdec")
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return ModelApi(mod.param_specs, mod.cache_specs, mod.apply)
+
+
+# -- architecture configs (populated by repro.configs) -----------------------
+
+_ARCH_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str, full: Callable[[], ModelConfig],
+                  smoke: Callable[[], ModelConfig]) -> None:
+    _ARCH_REGISTRY[name] = full
+    _SMOKE_REGISTRY[name] = smoke
+
+
+def _ensure_loaded() -> None:
+    import repro.configs  # noqa: F401  (registers everything)
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    reg = _SMOKE_REGISTRY if smoke else _ARCH_REGISTRY
+    if name not in reg:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(reg)}")
+    return reg[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_ARCH_REGISTRY)

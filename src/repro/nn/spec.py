@@ -1,0 +1,201 @@
+"""Parameter-spec system: the single source of truth for parameters.
+
+A model is described by a pytree (nested dicts) of :class:`ParamSpec` leaves.
+From that one tree we derive
+  * real arrays            (``materialize`` — used by CPU-scale runs/tests),
+  * ShapeDtypeStructs      (``abstract`` — used by the dry-run, NO allocation),
+  * PartitionSpecs         (``partition_specs`` — logical->mesh axis rules).
+
+This replaces flax's ``param``/``with_logical_partitioning`` machinery with a
+small explicit core so the whole framework is pure JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor.
+
+    ``logical_axes`` names each dim with a *logical* axis ("embed", "mlp",
+    "heads", ...).  Sharding rules (see :func:`partition_specs`) map logical
+    axes to physical mesh axes per (arch x shape x mesh) so the same model
+    code serves training FSDP, serving TP, etc.
+    """
+
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | scaled_normal
+    logical_axes: tuple[str | None, ...] = ()
+    init_scale: float = 1.0  # multiplier on the default fan-in scale
+
+    def __post_init__(self):
+        if self.logical_axes and len(self.logical_axes) != len(self.shape):
+            raise ValueError(
+                f"logical_axes {self.logical_axes} rank != shape {self.shape}"
+            )
+
+    # -- derivations ---------------------------------------------------------
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            std = 1.0 * self.init_scale
+            return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(
+                self.dtype
+            )
+        # fan-in scaled normal for weight matrices (last-but-one dim = fan_in
+        # for 2D [in, out]; use first dim product otherwise).
+        if len(self.shape) >= 2:
+            fan_in = int(math.prod(self.shape[:-1]))
+        else:
+            fan_in = max(1, self.shape[0] if self.shape else 1)
+        std = self.init_scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(
+            self.dtype
+        )
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Pytree) -> Pytree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Tree derivations
+# ---------------------------------------------------------------------------
+
+
+def abstract(tree: Pytree) -> Pytree:
+    """ShapeDtypeStruct tree — safe for .lower() without any allocation."""
+    return _tree_map_specs(lambda s: s.abstract(), tree)
+
+
+def materialize(tree: Pytree, key: jax.Array) -> Pytree:
+    """Instantiate real arrays. Key is split deterministically by flat index."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [spec.materialize(k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(tree: Pytree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(tree: Pytree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(
+        int(math.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical sharding rules
+# ---------------------------------------------------------------------------
+
+# A rule maps a logical axis name to a mesh axis name (or tuple of them, or
+# None for replication). First matching rule wins; unlisted logical axes are
+# replicated.
+Rules = Sequence[tuple[str, str | tuple[str, ...] | None]]
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[str | None],
+    rules: Rules,
+    mesh_axis_sizes: Mapping[str, int] | None = None,
+    shape: Sequence[int] | None = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec via `rules`.
+
+    If ``mesh_axis_sizes`` and ``shape`` are given, a mapping whose mesh-axis
+    product does not divide the dim size is dropped (replicated instead) —
+    this keeps one rule table usable across full + smoke configs.
+    """
+    rule_map = dict(rules)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for i, name in enumerate(logical_axes):
+        target = rule_map.get(name) if name is not None else None
+        if target is None:
+            entries.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        # drop already-used mesh axes (a mesh axis may appear only once)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        if mesh_axis_sizes is not None and shape is not None:
+            prod = math.prod(mesh_axis_sizes.get(a, 1) for a in axes)
+            if prod == 0 or shape[i] % max(prod, 1) != 0:
+                entries.append(None)
+                continue
+        used.update(axes)
+        entries.append(axes[0] if len(axes) == 1 else axes)
+    # trim trailing Nones for tidier specs
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def partition_specs(
+    tree: Pytree,
+    rules: Rules,
+    mesh: jax.sharding.Mesh | None = None,
+) -> Pytree:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+
+    def one(s: ParamSpec) -> P:
+        return logical_to_pspec(s.logical_axes, rules, sizes, s.shape)
+
+    return _tree_map_specs(one, tree)
+
+
+def named_shardings(
+    tree: Pytree, rules: Rules, mesh: jax.sharding.Mesh
+) -> Pytree:
+    from jax.sharding import NamedSharding
+
+    pspecs = partition_specs(tree, rules, mesh)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors
+# ---------------------------------------------------------------------------
+
+
+def w(shape, axes, dtype=jnp.float32, init="normal", scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, init, tuple(axes), scale)
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, "zeros", tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, "ones", tuple(axes))

@@ -1,0 +1,97 @@
+"""AdamW optimizer + LR schedules + global-norm clipping (pure JAX).
+
+Optimizer state is declared from the same ParamSpec tree as the params, so
+moments inherit the params' sharding (fully sharded optimizer states —
+ZeRO-style — fall out of the FSDP rules for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import spec as S
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def state_specs(param_specs: Any) -> dict:
+    """mu/nu in f32 with the same shapes+logical axes as the params."""
+
+    def f32(s: S.ParamSpec) -> S.ParamSpec:
+        return S.ParamSpec(s.shape, jnp.float32, "zeros", s.logical_axes)
+
+    return {
+        "mu": jax.tree.map(f32, param_specs, is_leaf=S.is_spec),
+        "nu": jax.tree.map(f32, param_specs, is_leaf=S.is_spec),
+        "step": S.ParamSpec((), jnp.int32, "zeros", ()),
+    }
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: dict,
+                  cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, mu, nu):
+        mu_n = b1 * mu + (1 - b1) * g
+        nu_n = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu_n / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu_n / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * pf
+        return (pf - lr * delta).astype(p.dtype), mu_n, nu_n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

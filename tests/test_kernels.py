@@ -1,0 +1,143 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+executed in interpret mode (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import integer_scale as isc
+from repro.core import packing, quant
+from repro.kernels import ref as KR
+from repro.kernels.act_quant import act_quant
+from repro.kernels.w4a8_gemm import fg_gemm_integer_scale
+from repro.kernels.w4a8_gemm_fscale import fg_gemm_float_scale
+from repro.kernels.w4a16_gemm import w4a16_gemm
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = [  # (M, K, N, group)
+    (1, 256, 128, 128),     # decode-like
+    (7, 512, 256, 128),     # ragged M
+    (48, 1024, 512, 128),
+    (16, 512, 384, 256),    # larger group
+    (128, 384, 128, 128),   # K not multiple of bk default
+]
+
+
+def _mk(seed, M, K, N, g, w_bits=4):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K))
+    qw = quant.quantize_weight(w, w_bits, g)
+    xq, sa = quant.quantize_activation(x)
+    packed = packing.pack_int4(qw.qvalue) if w_bits == 4 else qw.qvalue
+    return qw, packed, xq, sa
+
+
+@pytest.mark.parametrize("M,K,N,g", SHAPES)
+def test_is_kernel_bit_exact_vs_oracle(M, K, N, g):
+    qw, packed, xq, sa = _mk(0, M, K, N, g)
+    isw = isc.integerize(qw, 1024)
+    y_k = fg_gemm_integer_scale(xq, sa, packed, isw.int_scale,
+                                group_size=g, alpha=1024.0, interpret=True)
+    y_r = KR.fg_gemm_is_ref(xq, sa, packed, isw.int_scale,
+                            group_size=g, alpha=1024.0)
+    # integer path is bit-exact; final f32 epilogue is one multiply
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+@pytest.mark.parametrize("M,K,N,g", SHAPES)
+def test_fs_kernel_vs_oracle(M, K, N, g):
+    qw, packed, xq, sa = _mk(1, M, K, N, g)
+    y_k = fg_gemm_float_scale(xq, sa, packed, qw.scale,
+                              group_size=g, interpret=True)
+    y_r = KR.fg_gemm_fs_ref(xq, sa, packed, qw.scale, group_size=g)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N", [(1, 256, 128), (33, 512, 256)])
+def test_coarse_fs_kernel_vs_oracle(M, K, N):
+    qw, packed, xq, sa = _mk(2, M, K, N, -1)
+    y_k = fg_gemm_float_scale(xq, sa, packed, qw.scale[None, :],
+                              group_size=-1, interpret=True)
+    y_r = KR.fg_gemm_fs_ref(xq, sa, packed, qw.scale[None, :],
+                            group_size=-1)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N,g", SHAPES[:3])
+def test_w8_is_kernel_vs_oracle(M, K, N, g):
+    qw, packed, xq, sa = _mk(3, M, K, N, g, w_bits=8)
+    isw = isc.integerize(qw, "heuristic+6")
+    y_k = fg_gemm_integer_scale(xq, sa, packed, isw.int_scale,
+                                group_size=g, alpha=float(isw.alpha),
+                                w_bits=8, interpret=True)
+    y_r = KR.fg_gemm_is_ref(xq, sa, packed, isw.int_scale, group_size=g,
+                            alpha=float(isw.alpha), w_bits=8)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+@pytest.mark.parametrize("M,K,N,g", SHAPES[:3])
+def test_w4a16_kernel_vs_oracle(M, K, N, g):
+    key = jax.random.PRNGKey(5)
+    w = jax.random.normal(key, (K, N)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(6), (M, K)).astype(
+        jnp.bfloat16)
+    qw = quant.quantize_weight(w, 4, g)
+    packed = packing.pack_int4(qw.qvalue)
+    y_k = w4a16_gemm(x, packed, qw.scale, group_size=g, interpret=True)
+    y_r = KR.w4a16_gemm_ref(x, packed, qw.scale, group_size=g)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("M,K", [(1, 128), (5, 384), (64, 1024)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_act_quant_kernel_vs_oracle(M, K, bits):
+    x = (jax.random.normal(jax.random.PRNGKey(7), (M, K)) * 3).astype(
+        jnp.bfloat16)
+    q_k, s_k = act_quant(x, bits=bits, interpret=True)
+    q_r, s_r = KR.act_quant_ref(x, bits=bits)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-6, atol=1e-9)
+    # codes may differ by 1 at exact rounding ties (fusion order)
+    diff = np.abs(q_k.astype(np.int32) - q_r.astype(np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 5e-3  # rare rounding ties
+
+
+def test_kernel_block_shape_sweep():
+    """BlockSpec tiling must not change results."""
+    M, K, N, g = 40, 1024, 512, 128
+    qw, packed, xq, sa = _mk(8, M, K, N, g)
+    isw = isc.integerize(qw, 1024)
+    ref = KR.fg_gemm_is_ref(xq, sa, packed, isw.int_scale,
+                            group_size=g, alpha=1024.0)
+    for bm, bn, bk in [(8, 128, 128), (16, 256, 256), (128, 512, 1024),
+                       (32, 128, 512)]:
+        y = fg_gemm_integer_scale(
+            xq, sa, packed, isw.int_scale, group_size=g, alpha=1024.0,
+            bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref)), \
+            (bm, bn, bk)
+
+
+def test_qgemm_dispatch_matches_reference_path():
+    """kernels.ops.qgemm (pallas interpret) == qlinear reference path."""
+    from repro.core.qlinear import linear_apply, quantize_linear
+    from repro.core.recipe import QuantSpec
+    from repro.kernels.ops import qgemm_from_params
+
+    K, N, M = 512, 256, 24
+    spec = QuantSpec()
+    w = jax.random.normal(jax.random.PRNGKey(9), (K, N)) * 0.03
+    x = jax.random.normal(jax.random.PRNGKey(10), (M, K))
+    params = quantize_linear(w, spec)
+    y_ref = linear_apply(params, x.astype(jnp.float32), spec,
+                         mode="reference")
+    y_pal = qgemm_from_params(x.astype(jnp.float32), params, spec,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-2)

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED config of each assigned arch, run one forward + one train step on
+CPU, assert output shapes + no NaNs. Plus prefill/decode == train
+consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_arch, get_model, list_archs
+from repro.nn import spec as S
+from repro.training import optimizer as O
+from repro.training.train_step import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = [
+    "granite-34b", "qwen2-72b", "minicpm3-4b", "llama3.2-3b",
+    "phi3.5-moe-42b-a6.6b", "deepseek-v2-236b", "llama-3.2-vision-90b",
+    "xlstm-1.3b", "recurrentgemma-9b", "whisper-tiny", "llama2-7b",
+]
+
+
+def _inputs(cfg, B=2, Sq=32, key=0):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, Sq), 0,
+                              cfg.vocab_size)
+    mem = None
+    if cfg.family == "vlm":
+        mem = jax.random.normal(jax.random.PRNGKey(key + 1),
+                                (B, cfg.num_image_tokens, cfg.d_model),
+                                ) * 0.1
+    if cfg.family == "audio":
+        mem = jax.random.normal(jax.random.PRNGKey(key + 1),
+                                (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return toks, mem
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_arch(arch, smoke=True)
+    api = get_model(cfg)
+    specs = api.param_specs(cfg, None)
+    params = S.materialize(specs, jax.random.PRNGKey(0))
+    toks, mem = _inputs(cfg)
+    logits, _, aux = api.apply(params, cfg, toks, mode="train", memory=mem)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_arch(arch, smoke=True)
+    api = get_model(cfg)
+    specs = api.param_specs(cfg, None)
+    params = S.materialize(specs, jax.random.PRNGKey(0))
+    opt = S.materialize(O.state_specs(specs), jax.random.PRNGKey(1))
+    toks, mem = _inputs(cfg)
+    # next-token labels: identity labels saturate softmax at init for
+    # tied-embedding archs (gold logit = ||e||^2) -> exp-underflow -> 0 grad
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if mem is not None:
+        batch["image_embeds" if cfg.family == "vlm" else "frames"] = mem
+    step = jax.jit(make_train_step(api, cfg, O.AdamWConfig(lr=1e-3)))
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # optimizer state advanced (bf16 params may not change measurably
+    # after ONE small step — the f32 moments must)
+    assert int(opt2["step"]) == 1
+    mu_norm = sum(float(jnp.sum(jnp.abs(m))) for m in
+                  jax.tree.leaves(opt2["mu"]))
+    assert mu_norm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """decode(prefill(prompt)) logits == train-mode logits, per arch."""
+    cfg = get_arch(arch, smoke=True)
+    api = get_model(cfg)
+    params = S.materialize(api.param_specs(cfg, None), jax.random.PRNGKey(0))
+    B, Sq = 2, 16
+    toks, mem = _inputs(cfg, B, Sq)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        api.cache_specs(cfg, B, 48), is_leaf=S.is_spec)
+    logits_p, cache, _ = api.apply(params, cfg, toks, mode="prefill",
+                                   cache=cache, pos=0, memory=mem)
+    nt = jnp.argmax(logits_p[:, -1:], -1)
+    logits_d, cache, _ = api.apply(params, cfg, nt, mode="decode",
+                                   cache=cache, pos=Sq)
+    toks2 = jnp.concatenate([toks, nt], 1)
+    logits_full, _, _ = api.apply(params, cfg, toks2, mode="train",
+                                  memory=mem)
+    err = float(jnp.max(jnp.abs(logits_d[:, 0] - logits_full[:, Sq])))
+    tol = 0.15 if cfg.family in ("moe",) else 0.05  # moe: capacity drops
+    assert err < tol, err
+    assert not bool(jnp.isnan(logits_d).any())
+
+
+def test_int8_kv_cache_decode():
+    """Beyond-paper int8 KV: decode stays close to bf16-KV decode."""
+    import dataclasses
+
+    cfg = get_arch("llama3.2-3b", smoke=True)
+    api = get_model(cfg)
+    params = S.materialize(api.param_specs(cfg, None), jax.random.PRNGKey(0))
+    toks, _ = _inputs(cfg, 2, 16)
+
+    def decode_logits(c):
+        a = get_model(c)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             a.cache_specs(c, 2, 48), is_leaf=S.is_spec)
+        lp, cache, _ = a.apply(params, c, toks, mode="prefill",
+                               cache=cache, pos=0)
+        nt = jnp.argmax(lp[:, -1:], -1)
+        ld, _, _ = a.apply(params, c, nt, mode="decode", cache=cache,
+                           pos=16)
+        return ld
+
+    l_bf16 = decode_logits(cfg)
+    l_int8 = decode_logits(dataclasses.replace(cfg, kv_cache_dtype="int8"))
+    rel = float(jnp.linalg.norm(l_int8 - l_bf16)
+                / jnp.linalg.norm(l_bf16))
+    assert rel < 0.05, rel

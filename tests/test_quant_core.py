@@ -1,0 +1,161 @@
+"""Core quantization invariants — unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import integer_scale as isc
+from repro.core import packing, quant
+from repro.core.recipe import QuantSpec
+from repro.core import qlinear
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Round-trip and bound properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([128, 256, 384]),
+    n=st.sampled_from([8, 64, 96]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+    scale_mag=st.floats(1e-3, 10.0),
+)
+def test_weight_quant_error_bound(k, n, bits, seed, scale_mag):
+    """|w - dequant(quant(w))| <= scale/2 elementwise (RTN property)."""
+    w = np.random.default_rng(seed).normal(size=(k, n)) * scale_mag
+    qw = quant.quantize_weight(jnp.asarray(w, jnp.float32), bits, 128)
+    deq = np.asarray(qw.dequant())
+    G = k // 128
+    s = np.asarray(qw.scale).reshape(G, 1, n)
+    err = np.abs(w.reshape(G, 128, n) - deq.reshape(G, 128, n))
+    assert (err <= s / 2 + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.sampled_from([128, 256, 512]), n=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**16))
+def test_pack_unpack_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    packed = packing.pack_int4(jnp.asarray(q))
+    assert packed.shape == (k // 2, n)
+    out = np.asarray(packing.unpack_int4(packed))
+    assert (out == q).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(smin=st.floats(1e-8, 0.999), spread=st.floats(1.0, 100.0))
+def test_heuristic_amplifier_listing1(smin, spread):
+    """Paper Listing 1 contract: min(scale) * alpha >= 1, alpha = 2^n
+    minimal."""
+    scales = jnp.asarray([smin, smin * spread], jnp.float32)
+    alpha = float(isc.heuristic_amplifier(scales))
+    assert alpha >= 1 and (int(alpha) & (int(alpha) - 1)) == 0
+    assert smin * alpha >= 1.0 - 1e-4
+    if alpha > 1:
+        assert smin * (alpha / 2) < 1.0 + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.sampled_from([1, 7, 32]))
+def test_is_equals_fs_when_scales_representable(seed, m):
+    """If every group scale is exactly j/alpha, integer and float scale
+    GEMMs agree to float rounding."""
+    rng = np.random.default_rng(seed)
+    K, N, g, alpha = 256, 64, 128, 1024
+    codes = rng.integers(-7, 8, size=(K, N)).astype(np.int8)
+    scale = (rng.integers(1, 200, size=(K // g, N)) / alpha).astype(
+        np.float32)
+    qw = quant.QWeight(jnp.asarray(codes), jnp.asarray(scale), 4, g)
+    isw = isc.integerize(qw, alpha)
+    xq = jnp.asarray(rng.integers(-127, 128, size=(m, K)), jnp.int8)
+    sa = jnp.asarray(rng.uniform(0.001, 0.1, size=(m, 1)), jnp.float32)
+    y_fs = quant.fg_gemm_float_scale(xq, sa, qw)
+    y_is = isc.fg_gemm_integer_scale(xq, sa, isw)
+    np.testing.assert_allclose(np.asarray(y_is), np.asarray(y_fs),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_safe_fallback_matches_fast_path(seed):
+    """§B.4 de-amplified GEMM == fast path when no overflow occurs."""
+    rng = np.random.default_rng(seed)
+    K, N, m = 256, 32, 8
+    w = rng.normal(size=(K, N)).astype(np.float32) * 0.05
+    qw = quant.quantize_weight(jnp.asarray(w), 4, 128)
+    isw = isc.integerize(qw, 1024)
+    x = rng.normal(size=(m, K)).astype(np.float32)
+    xq, sa = quant.quantize_activation(jnp.asarray(x))
+    y_fast = isc.fg_gemm_integer_scale(xq, sa, isw)
+    y_safe = isc.fg_gemm_integer_scale_safe(xq, sa, isw)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_safe),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_overflow_bound_is_sound():
+    """Static bound >= any empirical accumulation (adversarial input)."""
+    rng = np.random.default_rng(0)
+    K, N = 256, 16
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    qw = quant.quantize_weight(jnp.asarray(w), 4, 128)
+    isw = isc.integerize(qw, 1024)
+    xq = jnp.full((4, K), 127, jnp.int8)  # worst-case activation
+    emp = int(isc.empirical_max_accum(xq, isw))
+    assert emp <= isc.overflow_bound(isw)
+    assert isc.overflow_bound(isw) < 2**31  # sane layer never overflows
+
+
+def test_integerize_rejects_bad_amplifier():
+    w = jnp.ones((128, 8))
+    qw = quant.quantize_weight(w, 4, 128)
+    with pytest.raises(ValueError):
+        isc.integerize(qw, 1000)  # not a power of two
+    with pytest.raises(ValueError):
+        isc.integerize(quant.quantize_weight(w, 4, -1), 1024)  # coarse
+
+
+# ---------------------------------------------------------------------------
+# qlinear end-to-end schemes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [
+    QuantSpec(),  # W4A8-IS (paper default)
+    QuantSpec(scale_mode="float"),
+    QuantSpec(a_bits=16),
+    QuantSpec(w_bits=8, amplifier="heuristic+6"),
+    QuantSpec(group_size=-1),
+    QuantSpec(a_bits=4),
+    QuantSpec(amplifier="heuristic"),
+])
+def test_qlinear_schemes_close_to_fp(spec):
+    key = jax.random.PRNGKey(0)
+    K, N, M = 512, 256, 16
+    w = jax.random.normal(key, (K, N)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    params = qlinear.quantize_linear(w, spec)
+    y = qlinear.linear_apply(params, x.astype(jnp.bfloat16), spec)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y.astype(jnp.float32) - ref)
+                / jnp.linalg.norm(ref))
+    assert rel < (0.35 if spec.a_bits == 4 else 0.25), (spec.name, rel)
+
+
+def test_qlinear_specs_match_quantize_output():
+    """param_specs shapes/dtypes == quantize_linear output (dry-run and
+    real params must agree)."""
+    spec = QuantSpec()
+    K, N = 512, 256
+    specs = qlinear.linear_specs(K, N, spec, ("embed", "mlp"))
+    params = qlinear.quantize_linear(jnp.ones((K, N)) * 0.01, spec)
+    assert set(specs) == set(params)
+    for k in specs:
+        assert specs[k].shape == params[k].shape, k
+        assert jnp.dtype(specs[k].dtype) == params[k].dtype, k
