@@ -110,3 +110,60 @@ class Report:
 
     def dump(self) -> str:
         return "\n".join(f"{n},{u:.1f},{d}" for n, u, d in self.rows)
+
+
+def make_expert_operands(E: int, K: int, N: int, group_size: int = 128,
+                         *, amplifier: int | str = 1024, seed: int = 0):
+    """Stacked per-expert W4 operands for the grouped MoE kernels/benches.
+
+    Returns (qvalue (E, K/2, N) packed int8, int_scale (E, G, N) int32,
+    float_scale (E, G, N) f32, alphas list[float]).
+    """
+    from repro.core import integer_scale as isc
+    from repro.core import packing, quant
+
+    packs, iscales, fscales, alphas = [], [], [], []
+    for e in range(E):
+        w = jax.random.normal(jax.random.PRNGKey(seed + e), (K, N)) * 0.05
+        qw = quant.quantize_weight(w, 4, group_size)
+        isw = isc.integerize(qw, amplifier)
+        packs.append(packing.pack_int4(qw.qvalue))
+        iscales.append(isw.int_scale)
+        fscales.append(qw.scale)
+        alphas.append(float(isw.alpha))
+    return (jnp.stack(packs), jnp.stack(iscales), jnp.stack(fscales),
+            alphas)
+
+
+def grouped_vs_vmapped_proxy(report, prefix: str, E: int, C: int, K: int,
+                             N: int, group_size: int = 128) -> None:
+    """CPU-proxy timing + parity: grouped integer-scale Pallas kernel
+    (interpret) vs the vmapped per-expert reference GEMM.
+
+    Interpret mode emulates the TPU kernel instruction-by-instruction while
+    the vmapped jnp path compiles natively, so absolute times are
+    structure/bookkeeping only — the bit-exact parity is the claim that
+    transfers to TPU.
+    """
+    from repro.core import quant
+    from repro.kernels.moe_gemm import fg_grouped_gemm_integer_scale
+    from repro.kernels.ref import fg_gemm_is_ref
+
+    qv, sc, _, _ = make_expert_operands(E, K, N, group_size)
+    x = jax.random.normal(jax.random.PRNGKey(99), (E, C, K))
+    xq, sa = quant.quantize_activation(x.reshape(E * C, K))
+    xq, sa = xq.reshape(E, C, K), sa.reshape(E, C, 1)
+
+    f_g = jax.jit(lambda a, s: fg_grouped_gemm_integer_scale(
+        a, s, qv, sc, group_size=group_size, alpha=1024.0, interpret=True))
+    f_v = jax.jit(lambda a, s: jax.vmap(
+        lambda ae, se, qe, sce: fg_gemm_is_ref(
+            ae, se, qe, sce, group_size=group_size, alpha=1024.0))(
+                a, s, qv, sc))
+    y_g, us_g = timed(f_g, xq, sa, repeats=2)
+    y_v, us_v = timed(f_v, xq, sa, repeats=2)
+    exact = bool(jnp.array_equal(y_g, y_v))
+    report.add(f"{prefix}/grouped-pallas-interpret", us_g,
+               f"CPU-proxy;E={E};C={C};K={K};N={N}")
+    report.add(f"{prefix}/vmapped-reference", us_v,
+               f"CPU-proxy;bit_exact_vs_grouped={exact}")

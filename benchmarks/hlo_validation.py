@@ -19,7 +19,7 @@ import dataclasses
 
 import jax
 
-from repro.launch.dryrun import build_cell
+from repro.launch.dryrun import build_cell, normalized_cost_analysis
 from repro.launch.mesh import make_production_mesh
 
 
@@ -35,7 +35,7 @@ def measured_flops(arch: str, shape: str, mesh, n_layers: int) -> float:
                                             "scan_layers": False})
     with mesh:
         compiled = lower_fn().compile()
-    return float(compiled.cost_analysis().get("flops", 0.0))
+    return float(normalized_cost_analysis(compiled).get("flops", 0.0))
 
 
 def main() -> None:

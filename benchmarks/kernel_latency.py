@@ -37,6 +37,12 @@ K, N = 4096, 22016  # paper Fig 3/5/6 shape; Fig 7 uses 4096x4096
 GROUP = 128
 G = K // GROUP
 
+# Grouped (batched-expert) GEMM shapes — paper §5.5 MoE targets.
+MOE_SHAPES = {  # name: (E experts, K, N) for one expert FFN projection
+    "mixtral-8x7b": (8, 4096, 14336),
+    "phi3.5-moe": (16, 4096, 6400),
+}
+
 
 def _stream_traffic(M, w_bytes_per_elem, a_bytes_per_elem, acc_bytes,
                     K=K, N=N):
@@ -118,6 +124,57 @@ def hlo_convert_counts() -> dict:
     return {"is": c_is.count(" convert("), "fs": c_fs.count(" convert(")}
 
 
+def grouped_hlo_convert_counts() -> dict:
+    """Lower the grouped MoE kernels (interpret) and count converts — the
+    grouped integer-scale kernel must keep the single-convert epilogue
+    structure of the dense kernel (one per output tile, none in the loop)."""
+    from repro.kernels.moe_gemm import (fg_grouped_gemm_float_scale,
+                                        fg_grouped_gemm_integer_scale)
+
+    from .common import make_expert_operands
+
+    E, C, K2, N2 = 2, 16, 512, 256
+    qv, iscale, fscale, _ = make_expert_operands(E, K2, N2, GROUP)
+    xq = jnp.ones((E, C, K2), jnp.int8)
+    sa = jnp.ones((E, C, 1), jnp.float32)
+
+    def low(fn, *args, **kw):
+        return jax.jit(lambda *a: fn(*a, **kw)).lower(*args).compile()
+
+    c_is = low(fg_grouped_gemm_integer_scale, xq, sa, qv, iscale,
+               group_size=GROUP, alpha=1024.0, interpret=True).as_text()
+    c_fs = low(fg_grouped_gemm_float_scale, xq, sa, qv, fscale,
+               group_size=GROUP, interpret=True).as_text()
+    return {"is": c_is.count(" convert("), "fs": c_fs.count(" convert(")}
+
+
+def grouped_derived(report: Report) -> None:
+    """Derived v5e latency for the grouped expert GEMM at real MoE dims:
+    the grid covers all experts in one launch, so total time is the sum of
+    per-expert dense GEMMs at C tokens capacity — the structural FS-vs-IS
+    and weight-only comparisons carry over per expert."""
+    for name, (E, Ke, Ne) in MOE_SHAPES.items():
+        for C in (16, 64, 256):
+            ts = {p: derived_latency(C, p, K=Ke, N=Ne)["t"] * E
+                  for p in ("w4a16", "w4a8-fs", "w4a8-is")}
+            report.add(
+                f"moe-grouped/derived-v5e/{name}/C{C}",
+                ts["w4a8-is"] * 1e6,
+                f"E={E};K={Ke};N={Ne};"
+                f"fs_over_is={ts['w4a8-fs'] / ts['w4a8-is']:.2f};"
+                f"w4a16_over_is={ts['w4a16'] / ts['w4a8-is']:.2f}")
+
+
+def grouped_cpu_proxy(report: Report) -> None:
+    """Wall-clock + parity of the grouped kernel vs the vmapped reference
+    at small expert dims (shared proxy; see common.grouped_vs_vmapped_proxy
+    for the CPU-vs-TPU caveats)."""
+    from .common import grouped_vs_vmapped_proxy
+
+    grouped_vs_vmapped_proxy(report, "moe-grouped/cpu-proxy", 4, 32, 512,
+                             512, GROUP)
+
+
 def cpu_proxy(report: Report) -> None:
     """Wall-clock of the jnp reference paths (structure proxy only)."""
     M2, K2, N2 = 64, 2048, 2048
@@ -165,5 +222,10 @@ def run(report: Report, fast: bool = False) -> None:
     counts = hlo_convert_counts()
     report.add("fig2/hlo-converts", 0.0,
                f"integer_scale={counts['is']};float_scale={counts['fs']}")
+    grouped_derived(report)
+    gcounts = grouped_hlo_convert_counts()
+    report.add("moe-grouped/hlo-converts", 0.0,
+               f"integer_scale={gcounts['is']};float_scale={gcounts['fs']}")
     if not fast:
         cpu_proxy(report)
+        grouped_cpu_proxy(report)

@@ -3,15 +3,24 @@
 The paper's Mixtral result: fine-grained W4A8 + IS quantizes MoE models
 that are otherwise hard at low bits. Here: the phi3.5-moe smoke config
 (same family: 16->4 experts top-2) with random-trained weights; claim
-validated structurally: expert-parallel quantized GEMMs run end-to-end
-and IS-vs-FS output deltas stay small relative to FP.
+validated structurally, on BOTH expert-GEMM routes:
+
+  * vmapped reference GEMMs (the always-available jnp path), and
+  * the fused grouped Pallas kernel (kernels/moe_gemm, interpret mode on
+    this CPU container) — one pallas_call over (experts, m, n, k-groups).
+
+For each route the IS-vs-FS output delta must stay small relative to FP,
+and the grouped route must agree with the vmapped route (act_quant
+rounding ties are the only permitted difference). Wall-clock of grouped
+(interpret) vs vmapped is reported as a labeled CPU proxy — interpret mode
+is an emulator, so only the numerics claim transfers to TPU.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ptq
+from repro.core import ptq, qlinear
 from repro.core.recipe import QuantRecipe, QuantSpec
 from repro.models.registry import get_arch, get_model
 from repro.nn import spec as S
@@ -23,15 +32,18 @@ def run(report: Report, fast: bool = False) -> None:
     cfg = get_arch("phi3.5-moe-42b-a6.6b", smoke=True)
     api = get_model(cfg)
     params = S.materialize(api.param_specs(cfg, None), jax.random.PRNGKey(3))
-    toks = jax.random.randint(jax.random.PRNGKey(4), (4, 64), 0,
+    shape = (2, 32) if fast else (4, 64)
+    toks = jax.random.randint(jax.random.PRNGKey(4), shape, 0,
                               cfg.vocab_size)
     logits_fp, _, _ = api.apply(params, cfg, toks, mode="train")
 
-    outs = {}
+    outs: dict = {}
+    qps: dict = {}
     for name, mode in (("float", "float"), ("integer", "integer")):
         spec = QuantSpec(scale_mode=mode)
         recipe = QuantRecipe(rules=(("*", spec),), name=f"moe-{name}")
         qp = ptq.post_training_quantize(api, cfg, params, recipe, None)
+        qps[name] = (qp, recipe)
         logits, _, _ = api.apply(qp, cfg, toks, recipe=recipe, mode="train")
         rel = float(jnp.linalg.norm(logits - logits_fp)
                     / jnp.linalg.norm(logits_fp))
@@ -40,3 +52,37 @@ def run(report: Report, fast: bool = False) -> None:
     d = float(jnp.linalg.norm(outs["integer"][0] - outs["float"][0])
               / jnp.linalg.norm(outs["float"][0]))
     report.add("moe/is-vs-fs", 0.0, f"relerr={d:.4f}")
+
+    # --- grouped Pallas route (interpret): same models, same tokens -------
+    grouped: dict = {}
+    prev_mode = qlinear.default_kernel_mode()
+    qlinear.set_default_kernel_mode("pallas_interpret")
+    try:
+        for name, (qp, recipe) in qps.items():
+            logits, _, _ = api.apply(qp, cfg, toks, recipe=recipe,
+                                     mode="train")
+            grouped[name] = logits
+            rel_fp = float(jnp.linalg.norm(logits - logits_fp)
+                           / jnp.linalg.norm(logits_fp))
+            rel_route = float(
+                jnp.linalg.norm(logits - outs[name][0])
+                / jnp.linalg.norm(outs[name][0]))
+            report.add(f"moe/grouped-w4a8-{name}-scale-vs-fp", 0.0,
+                       f"relerr={rel_fp:.4f}")
+            report.add(f"moe/grouped-vs-vmapped-{name}", 0.0,
+                       f"relerr={rel_route:.4f}")
+    finally:
+        qlinear.set_default_kernel_mode(prev_mode)
+    dg = float(jnp.linalg.norm(grouped["integer"] - grouped["float"])
+               / jnp.linalg.norm(grouped["float"]))
+    report.add("moe/grouped-is-vs-fs", 0.0,
+               f"relerr={dg:.4f};vmapped_relerr={d:.4f}")
+
+    # --- expert-GEMM latency: grouped kernel vs vmapped reference --------
+    if not fast:
+        from .common import grouped_vs_vmapped_proxy
+
+        # smoke expert dims (gate/up: d -> moe_d_ff = d)
+        grouped_vs_vmapped_proxy(report, "moe/expert-gemm",
+                                 cfg.num_experts, 32, cfg.d_model,
+                                 cfg.d_model)

@@ -184,9 +184,11 @@ def linear_apply(
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        y2 = kops.qgemm(
-            x2, params["qvalue"], params["scale"], qspec,
-            interpret=(mode == "pallas_interpret"),
+        # qgemm_from_params forwards the stored per-layer ``alpha`` —
+        # calling qgemm without it silently fell back to the qspec default
+        # and rescaled heuristic-amplifier layers by the wrong constant.
+        y2 = kops.qgemm_from_params(
+            x2, params, qspec, interpret=(mode == "pallas_interpret"),
         )
     else:
         y2 = _reference_qgemm(x2, params, qspec, K)
@@ -224,6 +226,55 @@ def _reference_qgemm(x2, params, qspec: QuantSpec, K: int) -> jax.Array:
         return acc.astype(jnp.float32) * (sa / params["alpha"])
     acc = jnp.sum(part.astype(jnp.float32) * scale[:, None, :], axis=0)
     return acc * sa
+
+
+def grouped_linear_apply(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    qspec: QuantSpec | None,
+    *,
+    mode: KernelMode | None = None,
+) -> jax.Array:
+    """Batched-expert linear: x (E, C, K) -> (E, C, N), params stacked with
+    a leading expert dim (the MoE dispatch-buffer path).
+
+    Under "pallas"/"pallas_interpret" every expert runs in ONE grouped
+    Pallas kernel (``repro.kernels.moe_gemm``) — per-expert ``alpha`` values
+    from heuristic amplifiers are forwarded and folded into the activation
+    scales. Otherwise falls back to vmapping the per-expert reference GEMM.
+    Activation compensation (``pre_scale``), rotation (``rot``) and bias are
+    applied once here so both branches share the exact same semantics.
+    """
+    mode = mode or _DEFAULT_MODE
+    if qspec is None:
+        y = jnp.einsum("eck,ekn->ecn", x, params["w"].astype(x.dtype))
+        if "b" in params:
+            y = y + params["b"][:, None, :].astype(y.dtype)
+        return y
+
+    out_dtype = x.dtype
+    x2 = x
+    if "pre_scale" in params:  # (E, K) per-expert compensation
+        x2 = x2 / params["pre_scale"][:, None, :].astype(x2.dtype)
+    if "rot" in params:  # (E, K, K) per-expert rotation
+        x2 = jnp.einsum("eck,ekj->ecj", x2, params["rot"].astype(x2.dtype))
+
+    core = {k: v for k, v in params.items()
+            if k in ("qvalue", "scale", "alpha")}
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+
+        y = kops.qgemm_grouped_from_params(
+            x2, core, qspec, interpret=(mode == "pallas_interpret"))
+    else:
+        K = x.shape[-1]
+        y = jax.vmap(
+            lambda p, xe: _reference_qgemm(xe, p, qspec, K))(core, x2)
+
+    y = y.astype(out_dtype)
+    if "b" in params:
+        y = y + params["b"][:, None, :].astype(y.dtype)
+    return y
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,272 @@
+"""Grouped (batched-expert) Pallas TPU kernels for MoE FFNs (paper §5.5).
+
+The Mixtral headline result needs every expert's fine-grained W4A8 GEMM to
+run through the integer-scale fast path. ``jax.vmap`` over the reference
+GEMM materializes E independent XLA dots with per-group float bookkeeping;
+instead these kernels run ONE ``pallas_call`` whose grid iterates
+``(experts, m-tiles, n-tiles, k-groups)`` over the dense dispatch buffer —
+the Marlin/FPTQ-style batched-expert GEMM, with the expert index just an
+extra (outermost) grid dimension selecting the weight/scale slabs.
+
+All three quantization schemes ride the same structure:
+
+  * ``fg_grouped_gemm_integer_scale`` — Eq. 2 per expert: int32 group
+    accumulation, ONE convert per output tile. Per-expert amplifiers
+    (heuristic recipes give each expert its own alpha) are folded into the
+    per-token activation scale ``sa`` before the kernel, so the epilogue is
+    identical to the single-expert kernel.
+  * ``fg_grouped_gemm_float_scale`` — Eq. 1 baseline (per-group converts),
+    also serves coarse per-channel scales (``group_size=-1``).
+  * ``grouped_w4a16_gemm`` — weight-only Marlin-analog (in-VMEM dequant to
+    bf16, fp MXU matmul).
+
+The block bodies are the SAME helpers the dense kernels use
+(``w4a8_gemm._group_accumulate`` / ``w4a16_gemm._dequant_group_accumulate``)
+— the grouped kernels add only the expert grid dimension and blocked
+indexing, so dense-vs-grouped can never drift numerically.
+
+Capacity slots beyond the routed token count arrive zero-filled from the
+MoE dispatch; int8 zero rows contribute zero partials, so padded slots cost
+MXU work but stay exact. ``ops.qgemm_grouped`` does quantize those zero
+rows (``act_quant``'s ``maximum(amax, 1e-8)`` floor keeps their scales
+finite — do not remove that guard while capacity padding exists); their
+quantized codes are still all-zero, so outputs for padded slots are
+exactly zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .w4a8_gemm import (_group_accumulate, _round_up, _snap_block)
+from .w4a16_gemm import _dequant_group_accumulate
+
+
+def _grouped_kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, acc_ref, *,
+                    nk: int, gs: int, groups_per_blk: int, w_bits: int,
+                    integer: bool, coarse: bool, out_dtype):
+    """One (expert, m, n) output tile; k innermost accumulates groups."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = _group_accumulate(
+        x_ref[0], wp_ref[0], s_ref[0], acc_ref[...],
+        gs=gs, groups_per_blk=groups_per_blk, w_bits=w_bits,
+        integer=integer, coarse=coarse)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        if integer:
+            # ONE I32->F32 convert per output tile; 1/alpha pre-folded
+            # into sa by the wrapper (per-expert alphas supported).
+            o_ref[0] = (acc_ref[...].astype(jnp.float32)
+                        * sa_ref[0]).astype(out_dtype)
+        else:
+            o_ref[0] = (acc_ref[...] * sa_ref[0]).astype(out_dtype)
+
+
+def _grouped_blocks(E, Cp, K, N, bm, bn, bk, *, pack, s_rows, coarse):
+    """Grid + BlockSpecs shared by the int- and float-scale variants."""
+    nk = K // bk
+    grid = (E, Cp // bm, N // bn, nk)
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+        pl.BlockSpec((1, bk // pack, bn), lambda e, i, j, k: (e, k, j)),
+        pl.BlockSpec((1, s_rows, bn),
+                     (lambda e, i, j, k: (e, 0, j)) if coarse
+                     else (lambda e, i, j, k: (e, k, j))),
+        pl.BlockSpec((1, bm, 1), lambda e, i, j, k: (e, i, 0)),
+    ]
+    out_spec = pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j))
+    return grid, in_specs, out_spec, nk
+
+
+def _pad_tokens(x, sa, C, bm):
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, 0)))
+        sa = jnp.pad(sa, ((0, 0), (0, Cp - C), (0, 0)))
+    return x, sa, Cp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "w_bits", "bm", "bn", "bk", "interpret",
+                     "out_dtype"),
+)
+def fg_grouped_gemm_integer_scale(
+    xq: jax.Array,        # int8 (E, C, K) dispatch buffer
+    sa: jax.Array,        # f32 (E, C, 1) per-token scales
+    qvalue: jax.Array,    # int8 (E, K/2, N) packed (w4) | (E, K, N) (w8)
+    int_scale: jax.Array, # int32 (E, K/g, N)
+    *,
+    group_size: int = 128,
+    alpha=1024.0,         # python float, or f32 (E,) per-expert amplifiers
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Batched-expert Eq. 2 GEMM: (E,C,K) x (E,K,N) -> (E,C,N) f32."""
+    E, C, K = xq.shape
+    N = qvalue.shape[2]
+    gs = group_size
+    if K % gs:
+        raise ValueError(f"K={K} % group={gs}")
+    bm = min(bm, _round_up(C, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), gs)
+    if bk % gs:
+        bk = gs  # block must hold whole groups
+    groups_per_blk = bk // gs
+
+    # Fold per-expert 1/alpha into the activation scales (exact for the
+    # power-of-two amplifiers Listing 1 produces).
+    a = jnp.asarray(alpha, jnp.float32)
+    sa = sa / (a.reshape(E, 1, 1) if a.ndim == 1 else a)
+
+    xq, sa, Cp = _pad_tokens(xq, sa, C, bm)
+    pack = 2 if w_bits == 4 else 1
+    grid, in_specs, out_spec, nk = _grouped_blocks(
+        E, Cp, K, N, bm, bn, bk, pack=pack, s_rows=groups_per_blk,
+        coarse=False)
+    out = pl.pallas_call(
+        functools.partial(
+            _grouped_kernel, nk=nk, gs=gs, groups_per_blk=groups_per_blk,
+            w_bits=w_bits, integer=True, coarse=False, out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, qvalue, int_scale, sa)
+    return out[:, :C]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "w_bits", "bm", "bn", "bk", "interpret",
+                     "out_dtype"),
+)
+def fg_grouped_gemm_float_scale(
+    xq: jax.Array,     # int8 (E, C, K)
+    sa: jax.Array,     # f32 (E, C, 1)
+    qvalue: jax.Array, # int8 (E, K/2, N) packed (w4) | (E, K, N) (w8)
+    scale: jax.Array,  # f32 (E, K/g, N) fine | (E, 1, N) coarse
+    *,
+    group_size: int = 128,  # -1 => coarse
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Batched-expert Eq. 1 baseline (per-group converts in the loop)."""
+    E, C, K = xq.shape
+    N = qvalue.shape[2]
+    coarse = group_size <= 0
+    gs = K if coarse else group_size
+    bm = min(bm, _round_up(C, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), 1 if coarse else gs)
+    if not coarse and bk % gs:
+        bk = gs
+    if coarse:
+        gs = bk  # each K-block is one "group" with the constant scale
+    groups_per_blk = bk // gs
+
+    xq, sa, Cp = _pad_tokens(xq, sa, C, bm)
+    pack = 2 if w_bits == 4 else 1
+    grid, in_specs, out_spec, nk = _grouped_blocks(
+        E, Cp, K, N, bm, bn, bk, pack=pack,
+        s_rows=1 if coarse else groups_per_blk, coarse=coarse)
+    out = pl.pallas_call(
+        functools.partial(
+            _grouped_kernel, nk=nk, gs=gs, groups_per_blk=groups_per_blk,
+            w_bits=w_bits, integer=False, coarse=coarse, out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xq, qvalue, scale, sa)
+    return out[:, :C]
+
+
+def _grouped_wo_kernel(x_ref, wp_ref, s_ref, o_ref, facc_ref, *,
+                       nk: int, gs: int, groups_per_blk: int, out_dtype):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        facc_ref[...] = jnp.zeros_like(facc_ref)
+
+    facc_ref[...] = _dequant_group_accumulate(
+        x_ref[0], wp_ref[0], s_ref[0], facc_ref[...],
+        gs=gs, groups_per_blk=groups_per_blk)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[0] = facc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "bm", "bn", "bk", "interpret",
+                     "out_dtype"),
+)
+def grouped_w4a16_gemm(
+    x: jax.Array,      # bf16 (E, C, K)
+    qvalue: jax.Array, # int8 (E, K/2, N) packed
+    scale: jax.Array,  # f32 (E, K/g, N)
+    *,
+    group_size: int = 128,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Batched-expert weight-only Marlin-analog: (E,C,K) -> (E,C,N)."""
+    E, C, K = x.shape
+    N = qvalue.shape[2]
+    gs = group_size
+    bm = min(bm, _round_up(C, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), gs)
+    if bk % gs:
+        bk = gs
+    groups_per_blk = bk // gs
+
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, 0)))
+    grid, in_specs, out_spec, nk = _grouped_blocks(
+        E, Cp, K, N, bm, bn, bk, pack=2, s_rows=groups_per_blk,
+        coarse=False)
+    out = pl.pallas_call(
+        functools.partial(_grouped_wo_kernel, nk=nk, gs=gs,
+                          groups_per_blk=groups_per_blk,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=in_specs[:3],  # no sa operand on the weight-only path
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), qvalue, scale)
+    return out[:, :C]

@@ -2,8 +2,16 @@
 
 ``qgemm`` is the single entry point used by ``repro.core.qlinear`` when the
 kernel mode is "pallas" / "pallas_interpret": it routes a (QuantSpec,
-operands) pair to the right kernel. On this CPU container only
+operands) pair to the right kernel. ``qgemm_grouped`` is the batched-expert
+analogue used by the MoE layer: stacked (E, ...) operands, one fused
+grouped kernel instead of a vmap over experts. On this CPU container only
 ``interpret=True`` executes; the BlockSpecs/grids are identical either way.
+
+``alpha`` (the integer-scale amplifier) may be a python float (static,
+baked into the kernel epilogue) or a traced f32 scalar / (E,) array (the
+per-layer / per-expert values stored in the param dict) — traced values are
+folded into the per-token activation scale, which is exact for the
+power-of-two amplifiers Listing 1 produces.
 """
 from __future__ import annotations
 
@@ -13,9 +21,16 @@ import jax.numpy as jnp
 from repro.core.recipe import QuantSpec
 
 from .act_quant import act_quant
+from .moe_gemm import (fg_grouped_gemm_float_scale,
+                       fg_grouped_gemm_integer_scale, grouped_w4a16_gemm)
 from .w4a8_gemm import fg_gemm_integer_scale
 from .w4a8_gemm_fscale import fg_gemm_float_scale
 from .w4a16_gemm import w4a16_gemm
+
+
+def _default_alpha(qspec: QuantSpec) -> float:
+    return float(qspec.amplifier) if isinstance(qspec.amplifier, int) \
+        else 1024.0
 
 
 def qgemm(
@@ -24,7 +39,7 @@ def qgemm(
     scale: jax.Array,     # int32 or f32 scales per scheme
     qspec: QuantSpec,
     *,
-    alpha: float | None = None,
+    alpha=None,           # float | traced f32 scalar | None
     interpret: bool = False,
     block: dict | None = None,
 ) -> jax.Array:
@@ -41,12 +56,16 @@ def qgemm(
     xq, sa = act_quant(x, bits=qspec.a_bits, interpret=interpret)
     if qspec.scale_mode == "integer" and qspec.fine_grained:
         if alpha is None:
-            alpha = float(qspec.amplifier) if isinstance(qspec.amplifier, int) \
-                else 1024.0
+            alpha = _default_alpha(qspec)
+        if not isinstance(alpha, (int, float)):
+            # traced per-layer amplifier: fold 1/alpha into sa (exact for
+            # the power-of-two alphas the heuristic emits)
+            sa = sa / jnp.asarray(alpha, jnp.float32)
+            alpha = 1.0
         return fg_gemm_integer_scale(
             xq, sa, qvalue, scale,
-            group_size=qspec.group_size, alpha=alpha, w_bits=qspec.w_bits,
-            interpret=interpret, **blk,
+            group_size=qspec.group_size, alpha=float(alpha),
+            w_bits=qspec.w_bits, interpret=interpret, **blk,
         )
     return fg_gemm_float_scale(
         xq, sa, qvalue, scale,
@@ -57,7 +76,65 @@ def qgemm(
 
 def qgemm_from_params(x, params: dict, qspec: QuantSpec, *, interpret=False,
                       block=None):
-    """Convenience: dispatch straight from a qlinear param dict."""
-    alpha = float(params["alpha"]) if "alpha" in params else None
+    """Convenience: dispatch straight from a qlinear param dict.
+
+    Passes the stored per-layer ``alpha`` through as a (possibly traced)
+    array — NOT ``float()``-coerced, so this works under jit and heuristic
+    amplifiers rescale by the layer's actual alpha.
+    """
     return qgemm(x, params["qvalue"], params["scale"], qspec,
-                 alpha=alpha, interpret=interpret, block=block)
+                 alpha=params.get("alpha"), interpret=interpret, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Grouped (batched-expert) dispatch — the MoE fast path
+# ---------------------------------------------------------------------------
+
+
+def qgemm_grouped(
+    x: jax.Array,         # (E, C, K) bf16/f32 dispatch buffer
+    qvalue: jax.Array,    # (E, K/2, N) packed | (E, K, N) int8
+    scale: jax.Array,     # (E, G, N) int32 or f32 per scheme
+    qspec: QuantSpec,
+    *,
+    alpha=None,           # float | f32 (E,) per-expert amplifiers | None
+    interpret: bool = False,
+    block: dict | None = None,
+) -> jax.Array:
+    """Batched-expert quantized GEMM; returns f32 (E, C, N)."""
+    blk = block or {}
+    if qspec.weight_only:
+        if qspec.w_bits != 4:
+            raise NotImplementedError("weight-only kernel is W4A16")
+        return grouped_w4a16_gemm(
+            x, qvalue, scale, group_size=qspec.group_size,
+            interpret=interpret, **blk,
+        )
+
+    E, C, K = x.shape
+    # per-token activation quant is expert-agnostic: flatten, quantize once
+    xq, sa = act_quant(x.reshape(E * C, K), bits=qspec.a_bits,
+                       interpret=interpret)
+    xq = xq.reshape(E, C, K)
+    sa = sa.reshape(E, C, 1)
+    if qspec.scale_mode == "integer" and qspec.fine_grained:
+        if alpha is None:
+            alpha = _default_alpha(qspec)
+        return fg_grouped_gemm_integer_scale(
+            xq, sa, qvalue, scale,
+            group_size=qspec.group_size, alpha=alpha,
+            w_bits=qspec.w_bits, interpret=interpret, **blk,
+        )
+    return fg_grouped_gemm_float_scale(
+        xq, sa, qvalue, scale,
+        group_size=qspec.group_size, w_bits=qspec.w_bits,
+        interpret=interpret, **blk,
+    )
+
+
+def qgemm_grouped_from_params(x, params: dict, qspec: QuantSpec, *,
+                              interpret=False, block=None):
+    """Dispatch from a stacked (per-expert) qlinear param dict."""
+    return qgemm_grouped(x, params["qvalue"], params["scale"], qspec,
+                         alpha=params.get("alpha"), interpret=interpret,
+                         block=block)

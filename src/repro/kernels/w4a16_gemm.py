@@ -20,6 +20,25 @@ from jax.experimental.pallas import tpu as pltpu
 from .w4a8_gemm import _cdiv, _round_up, _snap_block, _unpack_wblock
 
 
+def _dequant_group_accumulate(x, wp, s, facc, *, gs: int,
+                              groups_per_blk: int):
+    """Shared weight-only block body (also used by the grouped MoE kernel):
+    unpack int4, dequant each group to bf16 with its float scale, bf16 MXU
+    matmul with f32 accumulation."""
+    wfull = _unpack_wblock(wp, gs * groups_per_blk)
+    for gi in range(groups_per_blk):
+        xg = x[:, gi * gs:(gi + 1) * gs]  # (bm, gs) bf16
+        wg = wfull[gi * gs:(gi + 1) * gs, :]  # (gs, bn) int8
+        wd = (wg.astype(jnp.float32) * s[gi, :][None, :]).astype(
+            jnp.bfloat16
+        )
+        facc = facc + jax.lax.dot_general(
+            xg, wd, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return facc
+
+
 def _kernel(x_ref, wp_ref, s_ref, o_ref, facc_ref, *,
             nk: int, gs: int, groups_per_blk: int, out_dtype):
     k = pl.program_id(2)
@@ -28,19 +47,9 @@ def _kernel(x_ref, wp_ref, s_ref, o_ref, facc_ref, *,
     def _init():
         facc_ref[...] = jnp.zeros_like(facc_ref)
 
-    wfull = _unpack_wblock(wp_ref[...], gs * groups_per_blk)
-    facc = facc_ref[...]
-    for gi in range(groups_per_blk):
-        xg = x_ref[:, gi * gs:(gi + 1) * gs]  # (bm, gs) bf16
-        wg = wfull[gi * gs:(gi + 1) * gs, :]  # (gs, bn) int8
-        wd = (wg.astype(jnp.float32) * s_ref[gi, :][None, :]).astype(
-            jnp.bfloat16
-        )
-        facc = facc + jax.lax.dot_general(
-            xg, wd, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-    facc_ref[...] = facc
+    facc_ref[...] = _dequant_group_accumulate(
+        x_ref[...], wp_ref[...], s_ref[...], facc_ref[...],
+        gs=gs, groups_per_blk=groups_per_blk)
 
     @pl.when(k == nk - 1)
     def _epilogue():

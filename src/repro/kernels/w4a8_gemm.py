@@ -54,6 +54,35 @@ def _unpack_wblock(wp: jax.Array, bk: int) -> jax.Array:
     return out.astype(jnp.int8)
 
 
+def _group_accumulate(x, wp, s, acc, *, gs: int, groups_per_blk: int,
+                      w_bits: int, integer: bool, coarse: bool = False):
+    """Shared block body for every fine-grained W{4,8}A8 kernel: unpack the
+    packed weight block, run one MXU int8 matmul per group, scale-accumulate.
+
+    ``integer=True`` keeps the accumulation in int32 (Eq. 2 — the
+    integer-scale step, no convert in the loop); ``integer=False`` converts
+    each group partial to f32 and FMAs with the float scale (Eq. 1 — the
+    bottleneck the paper removes). ``coarse`` reuses scale row 0 for every
+    group (per-channel baseline).
+    """
+    wfull = _unpack_wblock(wp, gs * groups_per_blk) if w_bits == 4 else wp
+    for gi in range(groups_per_blk):  # static unroll over groups in block
+        xg = x[:, gi * gs:(gi + 1) * gs]  # (bm, gs) int8
+        wg = wfull[gi * gs:(gi + 1) * gs, :]
+        part = jax.lax.dot_general(  # MXU int8 matmul, int32 out
+            xg, wg, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        srow = s[0, :] if coarse else s[gi, :]
+        if integer:
+            # THE integer-scale step: stays in int32 — no convert in loop.
+            acc = acc + part * srow[None, :]
+        else:
+            # THE float-scale bottleneck: per-group convert + f32 FMA.
+            acc = acc + part.astype(jnp.float32) * srow[None, :]
+    return acc
+
+
 def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, acc_ref, *,
             nk: int, gs: int, groups_per_blk: int, w_bits: int,
             alpha: float, out_dtype):
@@ -63,19 +92,9 @@ def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    wfull = (_unpack_wblock(wp_ref[...], gs * groups_per_blk)
-             if w_bits == 4 else wp_ref[...])
-    acc = acc_ref[...]
-    for gi in range(groups_per_blk):  # static unroll over groups in block
-        xg = x_ref[:, gi * gs:(gi + 1) * gs]  # (bm, gs) int8
-        wg = wfull[gi * gs:(gi + 1) * gs, :]
-        part = jax.lax.dot_general(  # MXU int8 matmul, int32 out
-            xg, wg, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        # THE integer-scale step: stays in int32 — no convert in the loop.
-        acc = acc + part * s_ref[gi, :][None, :]
-    acc_ref[...] = acc
+    acc_ref[...] = _group_accumulate(
+        x_ref[...], wp_ref[...], s_ref[...], acc_ref[...],
+        gs=gs, groups_per_blk=groups_per_blk, w_bits=w_bits, integer=True)
 
     @pl.when(k == nk - 1)
     def _epilogue():

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .w4a8_gemm import _cdiv, _round_up, _snap_block, _unpack_wblock
+from .w4a8_gemm import _cdiv, _group_accumulate, _round_up, _snap_block
 
 
 def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, facc_ref, *,
@@ -34,20 +34,10 @@ def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, facc_ref, *,
     def _init():
         facc_ref[...] = jnp.zeros_like(facc_ref)
 
-    wfull = (_unpack_wblock(wp_ref[...], gs * groups_per_blk)
-             if w_bits == 4 else wp_ref[...])
-    facc = facc_ref[...]
-    for gi in range(groups_per_blk):
-        xg = x_ref[:, gi * gs:(gi + 1) * gs]
-        wg = wfull[gi * gs:(gi + 1) * gs, :]
-        part = jax.lax.dot_general(
-            xg, wg, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        s = s_ref[0, :] if coarse else s_ref[gi, :]
-        # THE float-scale bottleneck: per-group convert + f32 FMA.
-        facc = facc + part.astype(jnp.float32) * s[None, :]
-    facc_ref[...] = facc
+    facc_ref[...] = _group_accumulate(
+        x_ref[...], wp_ref[...], s_ref[...], facc_ref[...],
+        gs=gs, groups_per_blk=groups_per_blk, w_bits=w_bits,
+        integer=False, coarse=coarse)
 
     @pl.when(k == nk - 1)
     def _epilogue():

@@ -7,8 +7,10 @@ Design (DESIGN.md §3):
   -> weighted scatter-combine. Tokens beyond capacity are dropped (GShard).
 
 Expert FFN weights may be quantized (paper §5.5 — Mixtral): the batched
-expert GEMM vmaps the fine-grained integer-scale reference GEMM over the
-expert axis, so the HLO still contains int8 dot_generals per expert.
+expert GEMM runs the fused grouped integer-scale Pallas kernel
+(``repro.kernels.moe_gemm``) under kernel mode "pallas"/"pallas_interpret",
+and a vmapped fine-grained reference GEMM otherwise — either way the HLO
+contains int8 dot_generals per expert.
 
 Shared experts (DeepSeek-V2) are a plain always-on MLP.
 """
@@ -40,15 +42,14 @@ def expert_linear_specs(E: int, K: int, N: int, qspec, axes, dtype) -> dict:
 
 
 def expert_linear_apply(params: dict, x: jax.Array, qspec) -> jax.Array:
-    """x: (E, C, K) -> (E, C, N); vmap the per-expert (quantized) GEMM."""
-    if qspec is None:
-        return jnp.einsum("eck,ekn->ecn", x, params["w"].astype(x.dtype))
-    dt = x.dtype
+    """x: (E, C, K) -> (E, C, N), all experts in one call.
 
-    def one(p, xe):
-        return qlinear.linear_apply(p, xe, qspec)
-
-    return jax.vmap(one)(params, x).astype(dt)
+    Quantized experts route through ``qlinear.grouped_linear_apply``: under
+    kernel mode "pallas"/"pallas_interpret" that is ONE fused grouped
+    Pallas GEMM over the (experts, m, n, k-groups) grid (kernels/moe_gemm)
+    rather than a vmap of the per-expert reference GEMM.
+    """
+    return qlinear.grouped_linear_apply(params, x, qspec)
 
 
 # ---------------------------------------------------------------------------

@@ -138,7 +138,12 @@ class Engine:
 
             self.cache = jax.tree.map(splice, self.cache, cache1,
                                       self._batch_axes)
-            first = int(jnp.argmax(logits[0, true_len - 1]))
+            # token 0 must honor the sampling settings too — greedy argmax
+            # here ignored temperature/top_k for the first generated token
+            self._key, k = jax.random.split(self._key)
+            first = int(np.asarray(sampler.sample(
+                logits[:, true_len - 1], k,
+                temperature=self.sc.temperature, top_k=self.sc.top_k))[0])
             self.slots[i] = _Slot(request_id=rid, length=true_len,
                                   generated=[first], active=True)
 

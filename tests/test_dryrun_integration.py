@@ -9,6 +9,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow  # subprocess 512-device lower+compile (~40 s)
 @pytest.mark.parametrize("arch,shape", [("whisper-tiny", "train_4k")])
 def test_dryrun_cell_compiles_on_512_devices(tmp_path, arch, shape):
     out = tmp_path / "cell.jsonl"

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep shim
 
 from repro.models.registry import get_arch, get_model
 from repro.models.xlstm import _mlstm_cell, _mlstm_chunked

@@ -120,8 +120,30 @@ def test_kernel_block_shape_sweep():
         y = fg_gemm_integer_scale(
             xq, sa, packed, isw.int_scale, group_size=g, alpha=1024.0,
             bm=bm, bn=bn, bk=bk, interpret=True)
-        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref)), \
-            (bm, bn, bk)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref),
+                                      err_msg=f"blocks={(bm, bn, bk)}")
+
+
+def test_linear_apply_pallas_honors_stored_alpha():
+    """Regression: the Pallas branch of linear_apply used to drop the
+    stored per-layer ``alpha`` (heuristic amplifiers then rescaled by the
+    qspec default 1024 — outputs wrong by alpha/1024)."""
+    from repro.core.qlinear import linear_apply, quantize_linear
+    from repro.core.recipe import QuantSpec
+
+    K, N, M = 512, 256, 16
+    spec = QuantSpec(amplifier="heuristic+6")
+    w = jax.random.normal(jax.random.PRNGKey(11), (K, N)) * 0.03
+    x = jax.random.normal(jax.random.PRNGKey(12), (M, K))
+    params = quantize_linear(w, spec)
+    assert float(params["alpha"]) != 1024.0, \
+        "test needs a non-default amplifier to catch the fallback"
+    y_ref = linear_apply(params, x.astype(jnp.float32), spec,
+                         mode="reference")
+    y_pal = linear_apply(params, x.astype(jnp.float32), spec,
+                         mode="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-2)
 
 
 def test_qgemm_dispatch_matches_reference_path():

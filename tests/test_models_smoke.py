@@ -39,6 +39,8 @@ def test_all_archs_registered():
     assert set(ARCHS) <= set(list_archs())
 
 
+@pytest.mark.slow  # full-arch sweep; quantized family coverage
+# stays in the default run via test_system.test_quantized_smoke_*
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward(arch):
     cfg = get_arch(arch, smoke=True)
@@ -52,6 +54,8 @@ def test_smoke_forward(arch):
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow  # full-arch sweep; quantized family coverage
+# stays in the default run via test_system.test_quantized_smoke_*
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_arch(arch, smoke=True)
@@ -78,6 +82,8 @@ def test_smoke_train_step(arch):
     assert mu_norm > 0
 
 
+@pytest.mark.slow  # full-arch sweep; quantized family coverage
+# stays in the default run via test_system.test_quantized_smoke_*
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_prefill_decode_consistency(arch):
     """decode(prefill(prompt)) logits == train-mode logits, per arch."""

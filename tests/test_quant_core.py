@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep shim
 
 from repro.core import integer_scale as isc
 from repro.core import packing, quant
