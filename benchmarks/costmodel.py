@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.shapes import SHAPES, Shape
+from repro.configs.shapes import SHAPES
 from repro.models.config import ModelConfig
 from repro.models.registry import get_arch
 from repro.models.transformer import layer_kinds as tf_kinds

@@ -15,7 +15,6 @@ once inside a layer — a known ~4% residual for llama2-7b at 4k.)
 
     PYTHONPATH=src python -m benchmarks.hlo_validation
 """
-import dataclasses
 
 import jax
 

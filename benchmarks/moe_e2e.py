@@ -86,3 +86,28 @@ def run(report: Report, fast: bool = False) -> None:
         grouped_vs_vmapped_proxy(report, "moe/expert-gemm",
                                  cfg.num_experts, 32, cfg.d_model,
                                  cfg.d_model)
+
+    # --- ragged dispatch: padded-vs-ragged m-tiles at capacity factors ----
+    # The grouped route above already runs ragged (models.moe threads the
+    # per-expert routed counts into the scalar-prefetch kernel); this
+    # quantifies the skipped capacity padding at the smoke expert dims.
+    from repro.kernels.moe_gemm import ragged_tile_stats
+
+    from .common import (capacity_for, ragged_vs_dense_proxy,
+                         simulate_routed_counts)
+
+    E, top_k = cfg.num_experts, cfg.top_k
+    T = 256
+    counts = simulate_routed_counts(E, T, top_k, seed=5, skew=0.7)
+    for cf in (1.0, 1.5, 2.0):
+        C = capacity_for(T, top_k, E, cf)
+        stats = ragged_tile_stats(counts, C)
+        report.add(
+            f"moe/ragged-tiles/cf{cf}", 0.0,
+            f"E={E};C={C};bm={stats['bm']};"
+            f"m_tiles_dense={stats['dense_m_tiles']};"
+            f"m_tiles_ragged={stats['ragged_m_tiles']}")
+    if not fast:
+        C = capacity_for(T, top_k, E, 1.5)
+        ragged_vs_dense_proxy(report, "moe/ragged-expert-gemm", E, C,
+                              cfg.d_model, cfg.d_model, counts)

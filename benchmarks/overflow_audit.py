@@ -16,7 +16,6 @@ from repro.core import quant
 
 from .common import Report, calib_batches, load_bench_model
 from repro.core.ptq import collect_calibration
-from repro.core.recipe import QuantRecipe, QuantSpec
 
 
 def run(report: Report, fast: bool = False) -> None:

@@ -1,15 +1,19 @@
 """Benchmark entry point — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1,...]
+                                            [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
-Quality tables quantize the CPU-trained bench LM (results/bench_lm_ckpt,
-produced by examples/quickstart.py); kernel/roofline rows are derived
-from v5e constants + the dry-run artifacts, labeled as such.
+``--json PATH`` additionally writes the rows as a JSON document (the
+nightly CI job uploads it as a build artifact). Quality tables quantize
+the CPU-trained bench LM (results/bench_lm_ckpt, produced by
+examples/quickstart.py); kernel/roofline rows are derived from v5e
+constants + the dry-run artifacts, labeled as such.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -35,6 +39,8 @@ def main(argv=None) -> None:
                     help="fewer eval/calib batches")
     ap.add_argument("--only", default="",
                     help="comma-separated module subset")
+    ap.add_argument("--json", default="",
+                    help="also write results as JSON to this path")
     args = ap.parse_args(argv)
 
     mods = MODULES
@@ -57,6 +63,18 @@ def main(argv=None) -> None:
         print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s, {len(report.rows)} rows",
           file=sys.stderr)
+    if args.json:
+        doc = {
+            "modules": mods,
+            "fast": args.fast,
+            "elapsed_s": round(time.time() - t0, 1),
+            "failures": [{"module": m, "error": e} for m, e in failures],
+            "rows": [{"name": n, "us_per_call": u, "derived": d}
+                     for n, u, d in report.rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         raise SystemExit(1)

@@ -10,7 +10,6 @@ Validated claim: the recipe recovers most of the gap to FP.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

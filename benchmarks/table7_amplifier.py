@@ -7,7 +7,6 @@ histogram + weight MSE between integer- and float-scale dequantization.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

@@ -9,10 +9,8 @@ from __future__ import annotations
 import json
 import os
 
-from repro.configs import SHAPES
 
-from .roofline import CHIPS, HBM_BW, LINK_BW, PEAK_BF16, PEAK_INT8, \
-    analyze, load_records
+from .roofline import analyze, load_records
 
 
 def _fmt_bytes(b):

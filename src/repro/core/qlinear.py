@@ -13,14 +13,13 @@ for dry-run lowering and CPU tests) and the Pallas TPU kernels in
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn import spec as S
-from . import packing, quant
+from . import packing
 from .integer_scale import integerize
 from .quant import QWeight, quantize_activation, quantize_weight
 from .recipe import QuantSpec
@@ -233,17 +232,22 @@ def grouped_linear_apply(
     x: jax.Array,
     qspec: QuantSpec | None,
     *,
+    row_counts: jax.Array | None = None,
     mode: KernelMode | None = None,
 ) -> jax.Array:
     """Batched-expert linear: x (E, C, K) -> (E, C, N), params stacked with
     a leading expert dim (the MoE dispatch-buffer path).
 
     Under "pallas"/"pallas_interpret" every expert runs in ONE grouped
-    Pallas kernel (``repro.kernels.moe_gemm``) — per-expert ``alpha`` values
-    from heuristic amplifiers are forwarded and folded into the activation
-    scales. Otherwise falls back to vmapping the per-expert reference GEMM.
-    Activation compensation (``pre_scale``), rotation (``rot``) and bias are
-    applied once here so both branches share the exact same semantics.
+    ragged Pallas kernel (``repro.kernels.moe_gemm``) with activation
+    quantization fused into its first k-group pass — per-expert ``alpha``
+    values from heuristic amplifiers are forwarded and folded into the
+    activation scales. ``row_counts`` (int32 ``(E,)``, rows past it must be
+    zero-filled) lets the kernel skip capacity-padding m-tiles; the
+    reference branch ignores it (zero rows already produce zero outputs
+    there), so both branches keep identical semantics. Activation
+    compensation (``pre_scale``), rotation (``rot``) and bias are applied
+    once here so both branches share the exact same semantics.
     """
     mode = mode or _DEFAULT_MODE
     if qspec is None:
@@ -265,7 +269,8 @@ def grouped_linear_apply(
         from repro.kernels import ops as kops
 
         y = kops.qgemm_grouped_from_params(
-            x2, core, qspec, interpret=(mode == "pallas_interpret"))
+            x2, core, qspec, row_counts=row_counts,
+            interpret=(mode == "pallas_interpret"))
     else:
         K = x.shape[-1]
         y = jax.vmap(

@@ -19,7 +19,6 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Literal
 
 import jax

@@ -11,7 +11,6 @@ Axes vocabulary (see models/*):
 """
 from __future__ import annotations
 
-import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -14,14 +14,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .w4a8_gemm import _cdiv, _round_up
+from .w4a8_gemm import _round_up
+
+
+def _quantize_rows(x: jax.Array, *, qm: float):
+    """Shared block body: per-row symmetric absmax int8 quantization.
+
+    Used by the standalone ``act_quant`` kernel below AND by the ragged
+    grouped MoE GEMM (``moe_gemm``), which folds this into its first
+    k-group pass — both paths MUST run the exact same f32 ops so fused and
+    unfused activation quantization stay bit-identical. The ``1e-8`` amax
+    floor keeps all-zero (capacity-padded) rows finite; their codes are
+    still exactly zero.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qm
+    q = jnp.clip(jnp.round(xf / scale), -qm, qm).astype(jnp.int8)
+    return q, scale
 
 
 def _kernel(x_ref, q_ref, s_ref, *, qm: float):
-    x = x_ref[...].astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qm
-    q_ref[...] = jnp.clip(jnp.round(x / scale), -qm, qm).astype(jnp.int8)
+    q, scale = _quantize_rows(x_ref[...], qm=qm)
+    q_ref[...] = q
     s_ref[...] = scale
 
 

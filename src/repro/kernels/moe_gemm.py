@@ -27,11 +27,46 @@ indexing, so dense-vs-grouped can never drift numerically.
 
 Capacity slots beyond the routed token count arrive zero-filled from the
 MoE dispatch; int8 zero rows contribute zero partials, so padded slots cost
-MXU work but stay exact. ``ops.qgemm_grouped`` does quantize those zero
-rows (``act_quant``'s ``maximum(amax, 1e-8)`` floor keeps their scales
-finite — do not remove that guard while capacity padding exists); their
-quantized codes are still all-zero, so outputs for padded slots are
-exactly zero.
+MXU work but stay exact.
+
+Ragged scalar-prefetch variants (the ``*_ragged`` entry points)
+---------------------------------------------------------------
+
+The dense kernels above burn a full m-tile of MACs per capacity-padded
+tile. The ragged variants take the per-expert routed row counts as a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``) and skip every
+m-tile that starts at or past its expert's count. The contract:
+
+  * ``row_counts`` is int32 ``(E,)``; rows ``[0, row_counts[e])`` of expert
+    ``e``'s capacity slab are routed tokens, every row at or past
+    ``row_counts[e]`` MUST be zero-filled (exactly what the sort-based
+    dispatch in ``models.moe`` produces). Counts are clamped to ``C``.
+  * the grid still statically covers ``(E, C/bm, N/bn, K/bk)``, but for an
+    inactive m-tile the block index maps clamp every operand to an
+    already-resident block (no DMA is issued for a revisited block) and
+    ``pl.when`` skips the quant/MXU body, so inactive grid steps cost only
+    grid bookkeeping; the epilogue writes exact zeros for them. Executed
+    m-tile work drops from ``E * ceil(C/bm)`` to
+    ``sum_e ceil(row_counts[e]/bm)`` (see :func:`ragged_tile_stats`).
+  * activation quantization is FUSED: the ragged W4A8 kernels consume the
+    raw bf16/f32 dispatch buffer and quantize each (bm, K) row-block once
+    into VMEM scratch on the tile's first (j==0, k==0) pass, reusing the
+    codes for every n-tile/k-group — ``ops.qgemm_grouped`` no longer runs
+    the dense ``act_quant`` kernel over the full ``(E*C, K)`` buffer, so
+    the padded slots are never even quantized. The in-kernel math is
+    ``act_quant._quantize_rows`` verbatim, which keeps fused and unfused
+    paths bit-identical.
+  * bit-exactness invariant: for any zero-filled-past-count input, ragged
+    output == dense grouped output, element for element, including
+    per-expert alphas (the epilogue divides by alpha with the same op
+    order the dense wrapper uses when folding 1/alpha into ``sa``).
+
+With ragged skipping in place the ``act_quant`` ``maximum(amax, 1e-8)``
+floor is no longer what keeps padded slots sane on the grouped path (they
+are skipped outright, and partial-tile zero rows quantize to zero codes
+regardless of the floor); the floor still protects genuinely all-zero
+*routed* rows and the dense/standalone users, so it stays — but it can now
+be revisited independently of MoE capacity padding.
 """
 from __future__ import annotations
 
@@ -42,7 +77,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .w4a8_gemm import (_group_accumulate, _round_up, _snap_block)
+from .act_quant import _quantize_rows
+from .w4a8_gemm import (_cdiv, _group_accumulate, _round_up, _snap_block)
 from .w4a16_gemm import _dequant_group_accumulate
 
 
@@ -269,4 +305,335 @@ def grouped_w4a16_gemm(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x.astype(jnp.bfloat16), qvalue, scale)
+    return out[:, :C]
+
+
+# ---------------------------------------------------------------------------
+# Ragged scalar-prefetch variants (skip m-tiles past each expert's row count)
+# ---------------------------------------------------------------------------
+
+
+def ragged_tile_stats(row_counts, C: int, bm: int = 128) -> dict:
+    """Executed-m-tile accounting for a ragged launch (python ints).
+
+    ``dense_m_tiles`` is what the capacity-padded kernel runs; per m-tile
+    the full (N/bn, K/bk) inner grid does MXU work, so the ratio is the
+    MAC-savings of ragged skipping. Used by benchmarks/CI reporting.
+    """
+    bm = min(bm, _round_up(C, 8))
+    Cp = _round_up(C, bm)
+    counts = [min(int(c), C) for c in row_counts]
+    dense = len(counts) * (Cp // bm)
+    ragged = sum(_cdiv(c, bm) for c in counts)
+    return {"bm": bm, "dense_m_tiles": dense, "ragged_m_tiles": ragged}
+
+
+def _ragged_specs(E, Cp, K, N, bm, bn, bk, *, pack, s_rows, coarse,
+                  fused_quant, n_extra=0):
+    """Grid + BlockSpecs for the ragged kernels.
+
+    Index maps receive the scalar-prefetch ``row_counts`` ref as a trailing
+    arg. Inactive m-tiles clamp every input block index to one that is (or
+    was just) resident so the pipeline issues no DMA for them; the output
+    map is NOT clamped (inactive tiles must write their zeros).
+    """
+
+    def _last_tile(rc, e):
+        # index of the last active m-tile (0 when the expert is empty)
+        return jnp.maximum(pl.cdiv(rc[e], bm) - 1, 0)
+
+    if fused_quant:
+        # raw activations: one full-K row slab per (e, m-tile); quantized
+        # into scratch at (j==0, k==0) and reused across every (j, k).
+        def x_map(e, i, j, k, rc):
+            return (e, jnp.minimum(i, _last_tile(rc, e)), 0)
+
+        x_spec = pl.BlockSpec((1, bm, K), x_map)
+    else:
+        def x_map(e, i, j, k, rc):
+            act = i * bm < rc[e]
+            return (e, jnp.minimum(i, _last_tile(rc, e)),
+                    jnp.where(act, k, 0))
+
+        x_spec = pl.BlockSpec((1, bm, bk), x_map)
+
+    def w_map(e, i, j, k, rc):
+        act = i * bm < rc[e]
+        return (e, jnp.where(act, k, 0), jnp.where(act, j, 0))
+
+    def s_map(e, i, j, k, rc):
+        act = i * bm < rc[e]
+        if coarse:
+            return (e, 0, jnp.where(act, j, 0))
+        return (e, jnp.where(act, k, 0), jnp.where(act, j, 0))
+
+    nk = K // bk
+    grid = (E, Cp // bm, N // bn, nk)
+    in_specs = [
+        x_spec,
+        pl.BlockSpec((1, bk // pack, bn), w_map),
+        pl.BlockSpec((1, s_rows, bn), s_map),
+    ]
+    if n_extra:  # per-expert alpha: (E, 1) f32, one scalar block
+        in_specs.append(pl.BlockSpec((1, 1), lambda e, i, j, k, rc: (e, 0)))
+    out_spec = pl.BlockSpec((1, bm, bn), lambda e, i, j, k, rc: (e, i, j))
+    return grid, in_specs, out_spec, nk
+
+
+def _ragged_kernel(rc_ref, x_ref, wp_ref, s_ref, a_ref, o_ref,
+                   xq_s, sa_s, acc_ref, *,
+                   nk: int, gs: int, groups_per_blk: int, w_bits: int,
+                   integer: bool, coarse: bool, bm: int, bk: int,
+                   qm: float, out_dtype):
+    """Ragged W{4,8}A8 tile with FUSED activation quantization.
+
+    Quantizes the (bm, K) row slab once per m-tile (first j/k pass) into
+    int8+scale VMEM scratch via the exact ``act_quant`` block body, then
+    accumulates k-groups from the scratch codes. Inactive tiles skip all
+    of it and write zeros.
+    """
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    active = i * bm < rc_ref[e]
+
+    @pl.when(active & (j == 0) & (k == 0))
+    def _quant():
+        q, s = _quantize_rows(x_ref[0], qm=qm)
+        xq_s[...] = q
+        sa_s[...] = s
+
+    @pl.when(active)
+    def _body():
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        xblk = xq_s[:, pl.ds(k * bk, bk)]
+        acc_ref[...] = _group_accumulate(
+            xblk, wp_ref[0], s_ref[0], acc_ref[...],
+            gs=gs, groups_per_blk=groups_per_blk, w_bits=w_bits,
+            integer=integer, coarse=coarse)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        @pl.when(active)
+        def _write():
+            # same op order as the dense wrapper's 1/alpha folding
+            # (sa / alpha, then ONE multiply) so ragged == dense bitwise.
+            sa = sa_s[...] / a_ref[0]
+            if integer:
+                o_ref[0] = (acc_ref[...].astype(jnp.float32)
+                            * sa).astype(out_dtype)
+            else:
+                o_ref[0] = (acc_ref[...] * sa).astype(out_dtype)
+
+        @pl.when(jnp.logical_not(active))
+        def _zeros():
+            o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
+def _ragged_a8_call(x, row_counts, qvalue, scale, alpha, *, integer: bool,
+                    group_size: int, a_bits: int, w_bits: int,
+                    bm: int, bn: int, bk: int, interpret: bool, out_dtype):
+    """Shared wrapper for the ragged integer-/float-scale W{4,8}A8 kernels."""
+    E, C, K = x.shape
+    N = qvalue.shape[2]
+    coarse = group_size <= 0
+    gs = K if coarse else group_size
+    if not coarse and K % gs:
+        raise ValueError(f"K={K} % group={gs}")
+    bm = min(bm, _round_up(C, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), 1 if coarse else gs)
+    if not coarse and bk % gs:
+        bk = gs
+    if coarse:
+        gs = bk  # each K-block is one "group" with the constant scale
+    groups_per_blk = bk // gs
+    qm = float(2 ** (a_bits - 1) - 1)
+
+    if row_counts is None:
+        rc = jnp.full((E,), C, jnp.int32)
+    else:
+        rc = jnp.minimum(jnp.asarray(row_counts, jnp.int32), C)
+
+    # per-expert amplifier as an (E, 1) operand (1.0 on the float path)
+    a = jnp.broadcast_to(
+        jnp.asarray(alpha, jnp.float32).reshape(-1)[:, None], (E, 1))
+
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, 0)))
+
+    pack = 2 if w_bits == 4 else 1
+    grid, in_specs, out_spec, nk = _ragged_specs(
+        E, Cp, K, N, bm, bn, bk, pack=pack,
+        s_rows=1 if coarse else groups_per_blk, coarse=coarse,
+        fused_quant=True, n_extra=1)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[
+            pltpu.VMEM((bm, K), jnp.int8),     # quantized row slab
+            pltpu.VMEM((bm, 1), jnp.float32),  # per-token scales
+            pltpu.VMEM((bm, bn), acc_dtype),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _ragged_kernel, nk=nk, gs=gs, groups_per_blk=groups_per_blk,
+            w_bits=w_bits, integer=integer, coarse=coarse, bm=bm, bk=bk,
+            qm=qm, out_dtype=out_dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, N), out_dtype),
+        interpret=interpret,
+    )(rc, x, qvalue, scale, a)
+    return out[:, :C]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "a_bits", "w_bits", "bm", "bn", "bk",
+                     "interpret", "out_dtype"),
+)
+def fg_grouped_gemm_integer_scale_ragged(
+    x: jax.Array,          # bf16/f32 (E, C, K) RAW dispatch buffer
+    row_counts,            # int32 (E,) routed rows per expert, or None
+    qvalue: jax.Array,     # int8 (E, K/2, N) packed (w4) | (E, K, N) (w8)
+    int_scale: jax.Array,  # int32 (E, K/g, N)
+    *,
+    group_size: int = 128,
+    alpha=1024.0,          # python float, or f32 (E,) per-expert amplifiers
+    a_bits: int = 8,
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Ragged batched-expert Eq. 2 GEMM with fused act-quant."""
+    return _ragged_a8_call(
+        x, row_counts, qvalue, int_scale, alpha, integer=True,
+        group_size=group_size, a_bits=a_bits, w_bits=w_bits,
+        bm=bm, bn=bn, bk=bk, interpret=interpret, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "a_bits", "w_bits", "bm", "bn", "bk",
+                     "interpret", "out_dtype"),
+)
+def fg_grouped_gemm_float_scale_ragged(
+    x: jax.Array,      # bf16/f32 (E, C, K) RAW dispatch buffer
+    row_counts,        # int32 (E,) routed rows per expert, or None
+    qvalue: jax.Array, # int8 (E, K/2, N) packed (w4) | (E, K, N) (w8)
+    scale: jax.Array,  # f32 (E, K/g, N) fine | (E, 1, N) coarse
+    *,
+    group_size: int = 128,  # -1 => coarse
+    a_bits: int = 8,
+    w_bits: int = 4,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Ragged batched-expert Eq. 1 baseline with fused act-quant."""
+    return _ragged_a8_call(
+        x, row_counts, qvalue, scale, 1.0, integer=False,
+        group_size=group_size, a_bits=a_bits, w_bits=w_bits,
+        bm=bm, bn=bn, bk=bk, interpret=interpret, out_dtype=out_dtype)
+
+
+def _ragged_wo_kernel(rc_ref, x_ref, wp_ref, s_ref, o_ref, facc_ref, *,
+                      nk: int, gs: int, groups_per_blk: int, bm: int,
+                      out_dtype):
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+    k = pl.program_id(3)
+    active = i * bm < rc_ref[e]
+
+    @pl.when(active)
+    def _body():
+        @pl.when(k == 0)
+        def _init():
+            facc_ref[...] = jnp.zeros_like(facc_ref)
+
+        facc_ref[...] = _dequant_group_accumulate(
+            x_ref[0], wp_ref[0], s_ref[0], facc_ref[...],
+            gs=gs, groups_per_blk=groups_per_blk)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        @pl.when(active)
+        def _write():
+            o_ref[0] = facc_ref[...].astype(out_dtype)
+
+        @pl.when(jnp.logical_not(active))
+        def _zeros():
+            o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "bm", "bn", "bk", "interpret",
+                     "out_dtype"),
+)
+def grouped_w4a16_gemm_ragged(
+    x: jax.Array,      # bf16 (E, C, K)
+    row_counts,        # int32 (E,) routed rows per expert, or None
+    qvalue: jax.Array, # int8 (E, K/2, N) packed
+    scale: jax.Array,  # f32 (E, K/g, N)
+    *,
+    group_size: int = 128,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Ragged batched-expert weight-only Marlin-analog (no act-quant)."""
+    E, C, K = x.shape
+    N = qvalue.shape[2]
+    gs = group_size
+    bm = min(bm, _round_up(C, 8))
+    bn = _snap_block(N, bn, 128)
+    bk = _snap_block(K, min(bk, K), gs)
+    if bk % gs:
+        bk = gs
+    groups_per_blk = bk // gs
+
+    if row_counts is None:
+        rc = jnp.full((E,), C, jnp.int32)
+    else:
+        rc = jnp.minimum(jnp.asarray(row_counts, jnp.int32), C)
+
+    Cp = _round_up(C, bm)
+    if Cp != C:
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, 0)))
+    grid, in_specs, out_spec, nk = _ragged_specs(
+        E, Cp, K, N, bm, bn, bk, pack=2, s_rows=groups_per_blk,
+        coarse=False, fused_quant=False)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_wo_kernel, nk=nk, gs=gs,
+                          groups_per_blk=groups_per_blk, bm=bm,
+                          out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, N), out_dtype),
+        interpret=interpret,
+    )(rc, x.astype(jnp.bfloat16), qvalue, scale)
     return out[:, :C]

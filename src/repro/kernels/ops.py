@@ -21,8 +21,9 @@ import jax.numpy as jnp
 from repro.core.recipe import QuantSpec
 
 from .act_quant import act_quant
-from .moe_gemm import (fg_grouped_gemm_float_scale,
-                       fg_grouped_gemm_integer_scale, grouped_w4a16_gemm)
+from .moe_gemm import (fg_grouped_gemm_float_scale_ragged,
+                       fg_grouped_gemm_integer_scale_ragged,
+                       grouped_w4a16_gemm_ragged)
 from .w4a8_gemm import fg_gemm_integer_scale
 from .w4a8_gemm_fscale import fg_gemm_float_scale
 from .w4a16_gemm import w4a16_gemm
@@ -98,43 +99,48 @@ def qgemm_grouped(
     qspec: QuantSpec,
     *,
     alpha=None,           # float | f32 (E,) per-expert amplifiers | None
+    row_counts=None,      # int32 (E,) routed rows per expert | None=all C
     interpret: bool = False,
     block: dict | None = None,
 ) -> jax.Array:
-    """Batched-expert quantized GEMM; returns f32 (E, C, N)."""
+    """Batched-expert quantized GEMM; returns f32 (E, C, N).
+
+    Always routes through the ragged scalar-prefetch kernels
+    (``kernels.moe_gemm``): activation quantization happens INSIDE the
+    grouped kernel's first k-group pass (no dense ``act_quant`` sweep over
+    the ``(E*C, K)`` buffer), and when ``row_counts`` is given, m-tiles
+    entirely past an expert's routed row count are skipped. Rows at or past
+    ``row_counts[e]`` must be zero-filled (the MoE dispatch guarantees
+    this); ``row_counts=None`` treats every capacity slot as routed.
+    """
     blk = block or {}
     if qspec.weight_only:
         if qspec.w_bits != 4:
             raise NotImplementedError("weight-only kernel is W4A16")
-        return grouped_w4a16_gemm(
-            x, qvalue, scale, group_size=qspec.group_size,
+        return grouped_w4a16_gemm_ragged(
+            x, row_counts, qvalue, scale, group_size=qspec.group_size,
             interpret=interpret, **blk,
         )
 
-    E, C, K = x.shape
-    # per-token activation quant is expert-agnostic: flatten, quantize once
-    xq, sa = act_quant(x.reshape(E * C, K), bits=qspec.a_bits,
-                       interpret=interpret)
-    xq = xq.reshape(E, C, K)
-    sa = sa.reshape(E, C, 1)
     if qspec.scale_mode == "integer" and qspec.fine_grained:
         if alpha is None:
             alpha = _default_alpha(qspec)
-        return fg_grouped_gemm_integer_scale(
-            xq, sa, qvalue, scale,
+        return fg_grouped_gemm_integer_scale_ragged(
+            x, row_counts, qvalue, scale,
             group_size=qspec.group_size, alpha=alpha,
-            w_bits=qspec.w_bits, interpret=interpret, **blk,
+            a_bits=qspec.a_bits, w_bits=qspec.w_bits,
+            interpret=interpret, **blk,
         )
-    return fg_grouped_gemm_float_scale(
-        xq, sa, qvalue, scale,
-        group_size=qspec.group_size, w_bits=qspec.w_bits,
-        interpret=interpret, **blk,
+    return fg_grouped_gemm_float_scale_ragged(
+        x, row_counts, qvalue, scale,
+        group_size=qspec.group_size, a_bits=qspec.a_bits,
+        w_bits=qspec.w_bits, interpret=interpret, **blk,
     )
 
 
 def qgemm_grouped_from_params(x, params: dict, qspec: QuantSpec, *,
-                              interpret=False, block=None):
+                              row_counts=None, interpret=False, block=None):
     """Dispatch from a stacked (per-expert) qlinear param dict."""
     return qgemm_grouped(x, params["qvalue"], params["scale"], qspec,
-                         alpha=params.get("alpha"), interpret=interpret,
-                         block=block)
+                         alpha=params.get("alpha"), row_counts=row_counts,
+                         interpret=interpret, block=block)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .w4a8_gemm import _cdiv, _round_up, _snap_block, _unpack_wblock
+from .w4a8_gemm import _round_up, _snap_block, _unpack_wblock
 
 
 def _dequant_group_accumulate(x, wp, s, facc, *, gs: int,

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .w4a8_gemm import _cdiv, _group_accumulate, _round_up, _snap_block
+from .w4a8_gemm import _group_accumulate, _round_up, _snap_block
 
 
 def _kernel(x_ref, wp_ref, s_ref, sa_ref, o_ref, facc_ref, *,

@@ -11,7 +11,6 @@ convert counts), alongside analytic before/after roofline terms.
 
 Writes results/hillclimb.json consumed by EXPERIMENTS.md §Perf.
 """
-import dataclasses
 import json
 import re
 import time
@@ -20,8 +19,7 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed import sharding as shard
-from repro.launch.dryrun import parse_collectives, run_cell
+from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh
 from repro.models import moe
 

@@ -9,12 +9,10 @@ heartbeat/straggler hooks, async atomic checkpoints, restart-from-latest.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticPipeline

@@ -9,7 +9,6 @@ sliding windows (recurrentgemma local attention) and int8-quantized KV
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +85,7 @@ def flash_attention(
         q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
 
         def kv_body(carry, ki):
-            m, l, acc = carry
+            m, den, acc = carry
             kch = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
             vch = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
             s = jnp.einsum(
@@ -103,18 +102,19 @@ def flash_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             corr = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            den_new = den * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p, vch.astype(jnp.float32),
                 preferred_element_type=jnp.float32,
             )
-            return (m_new, l_new, acc_new), None
+            return (m_new, den_new, acc_new), None
 
         m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
         a0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        (m, den, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                        jnp.arange(nk))
+        out = acc / jnp.maximum(den, 1e-30)[..., None]
         return out  # (B, Hkv, G, q_chunk, Dv)
 
     if nq == 1:

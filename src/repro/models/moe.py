@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 from repro.core import qlinear
 from repro.nn import spec as S
-from .common import apply_linear, linear
 from .config import ModelConfig
 from .mlp import mlp_apply, mlp_specs
 
@@ -41,15 +40,19 @@ def expert_linear_specs(E: int, K: int, N: int, qspec, axes, dtype) -> dict:
     return jax.tree.map(stack, base, is_leaf=S.is_spec)
 
 
-def expert_linear_apply(params: dict, x: jax.Array, qspec) -> jax.Array:
+def expert_linear_apply(params: dict, x: jax.Array, qspec,
+                        row_counts: jax.Array | None = None) -> jax.Array:
     """x: (E, C, K) -> (E, C, N), all experts in one call.
 
     Quantized experts route through ``qlinear.grouped_linear_apply``: under
     kernel mode "pallas"/"pallas_interpret" that is ONE fused grouped
     Pallas GEMM over the (experts, m, n, k-groups) grid (kernels/moe_gemm)
-    rather than a vmap of the per-expert reference GEMM.
+    rather than a vmap of the per-expert reference GEMM. ``row_counts``
+    (int32 (E,), routed rows per expert; rows past it are zero-filled by
+    the dispatch) lets the ragged kernel skip capacity-padding m-tiles.
     """
-    return qlinear.grouped_linear_apply(params, x, qspec)
+    return qlinear.grouped_linear_apply(params, x, qspec,
+                                        row_counts=row_counts)
 
 
 # ---------------------------------------------------------------------------
@@ -117,10 +120,17 @@ def moe_specs(cfg: ModelConfig, recipe, base: str) -> dict:
     return out
 
 
-def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
-    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
-            / max(cfg.num_experts, 1))
+def capacity(tokens: int, top_k: int, num_experts: int,
+             capacity_factor: float) -> int:
+    """Per-expert capacity (8-aligned) — also imported by benchmarks so
+    their ragged-tile accounting can never drift from the model's."""
+    c = int(tokens * top_k * capacity_factor / max(num_experts, 1))
     return max(8, -(-c // 8) * 8)
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    return capacity(tokens_per_group, cfg.top_k, cfg.num_experts,
+                    cfg.capacity_factor)
 
 
 def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, recipe,
@@ -167,23 +177,34 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, recipe,
         buf = jnp.zeros((E * C, d), xg.dtype)
         vals = jnp.where(keep[:, None], xg[t_s], 0)
         buf = buf.at[slot].add(vals)  # kept slots unique -> add == set
-        return buf.reshape(E, C, d), (t_s, g_s, e_s, pos, keep)
+        return (buf.reshape(E, C, d), (t_s, g_s, e_s, pos, keep),
+                jnp.minimum(counts, C).astype(jnp.int32))
 
-    buf, meta = jax.vmap(dispatch_one)(xf, expert_idx, gate_vals)
+    buf, meta, counts = jax.vmap(dispatch_one)(xf, expert_idx, gate_vals)
     # buf: (G, E, C, d) — E sharded on `model` via logical axis "experts"
+    # counts: (G, E) routed (capacity-clipped) rows per expert — slots at or
+    # past counts[g, e] are zero-filled, which is exactly the ragged grouped
+    # kernel's row_counts contract.
 
     if cfg.moe_int8_dispatch:
         buf = _int8_transport(buf)
+
+    # With one dispatch group the expert slab rows [0, counts[0, e]) are
+    # contiguous, so the ragged grouped kernel can skip the padded m-tiles.
+    # With G > 1 the (E, G*C, d) reshape interleaves each group's padding
+    # into the middle of the slab, so raggedness is not expressible as a
+    # single per-expert count — fall back to the dense (exact) behavior.
+    row_counts = counts[0] if G == 1 else None
 
     def expert_ffn(b):  # b: (G, E, C, d) -> (G, E, C, d)
         be = jnp.swapaxes(b, 0, 1).reshape(E, G * C, d)
         qs_g = recipe.spec_for(f"{base}/gate") if recipe else None
         qs_u = recipe.spec_for(f"{base}/up") if recipe else None
         qs_d = recipe.spec_for(f"{base}/down") if recipe else None
-        g = expert_linear_apply(params["gate"], be, qs_g)
-        u = expert_linear_apply(params["up"], be, qs_u)
+        g = expert_linear_apply(params["gate"], be, qs_g, row_counts)
+        u = expert_linear_apply(params["up"], be, qs_u, row_counts)
         h = (jax.nn.silu(g.astype(jnp.float32)).astype(be.dtype) * u)
-        y = expert_linear_apply(params["down"], h, qs_d)
+        y = expert_linear_apply(params["down"], h, qs_d, row_counts)
         return jnp.swapaxes(y.reshape(E, G, C, d), 0, 1)
 
     yb = expert_ffn(buf)  # (G, E, C, d)

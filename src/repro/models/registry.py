@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable
+from typing import Callable
 
 from .config import ModelConfig
 

@@ -8,8 +8,6 @@ model's every-5th cross-attention layer) fall out of the same mechanism.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ here it runs CPU-sized models end-to-end for the examples and tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -54,8 +54,8 @@ def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 def global_norm(tree: Any) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def clip_by_global_norm(grads: Any, max_norm: float):

@@ -9,8 +9,6 @@ step granularity at scale.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +49,9 @@ def make_train_step(api: ModelApi, cfg: ModelConfig,
             # microbatch scan: split leading batch dim into grad_accum chunks
             def micro(carry, mb):
                 acc = carry
-                (l, p), g = grad_fn(params, mb)
+                (lv, p), g = grad_fn(params, mb)
                 acc = jax.tree.map(jnp.add, acc,
-                                   ((l, p["ce"], p["aux"]), g))
+                                   ((lv, p["ce"], p["aux"]), g))
                 return acc, None
 
             def split(v):

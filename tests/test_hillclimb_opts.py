@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st  # optional dev dep shim
 
 from repro.models.registry import get_arch, get_model

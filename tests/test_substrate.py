@@ -10,7 +10,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticPipeline
-from repro.distributed.fault import FailureInjector, Heartbeat
+from repro.distributed.fault import Heartbeat
 from repro.distributed import sharding as shard
 from repro.nn import spec as S
 from repro.training import optimizer as O

@@ -1,6 +1,5 @@
 """End-to-end system tests: train -> PTQ (all algorithms) -> quantized
 apply/serve, quantized smoke for every arch family, dry-run machinery."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
