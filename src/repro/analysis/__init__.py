@@ -1,0 +1,43 @@
+"""repro.analysis — static certification + lint for the quantized stack.
+
+Two cooperating passes over *traced jaxprs* (nothing here executes a
+kernel):
+
+1. **Interval dataflow** (:mod:`.intervals`, :mod:`.interp`) — seeds
+   value ranges from quantized dtypes and config contracts (|xq| <=
+   qmax(a_bits), weight codes from w_bits, integer scales tight from the
+   concrete array), propagates them through dot_general / add / mul /
+   convert / shifts / clamps and straight through ``pallas_call`` bodies
+   (the innermost grid axis is iterated exactly, so the k-loop INT32
+   accumulator is modeled without widening).
+
+2. **Lint rules** (:mod:`.lint`) + **overflow certificates**
+   (:mod:`.certify`) consuming the analysis:
+
+   * certificate contract: ``bound < 2**31`` proves the Eq. 2 group
+     accumulator can never overflow INT32 under the dtype contracts —
+     verdicts ``certified`` / ``capped-alpha`` (largest safe power-of-two
+     amplifier substituted) / ``fallback`` (take the paper's §B.4 safe
+     GEMM). ``core.qlinear.finish_quant`` applies this to every
+     integer-scale layer at quantization time.
+   * lint rules: int-dot-preferred-type, narrowing-convert, int-overflow,
+     float-accum-on-is-path, blockspec-divisibility, index-map-bounds,
+     uninit-read (details in :mod:`.lint`).
+
+To register a kernel, append a ``KernelEntry`` in
+:mod:`.registry` (docstring there has the field contract). The CI gate
+is ``python -m repro.analysis.qlint`` (:mod:`.qlint`).
+"""
+from .certify import (Certificate, certify_analysis, resolve_amplifier,
+                      spec_verdict, static_accum_bound, summary)
+from .interp import DATA, Analysis, analyze_fn, analyze_jaxpr
+from .intervals import Interval
+from .lint import Finding, run_rules
+from .registry import KernelEntry, entries
+
+__all__ = [
+    "Analysis", "Certificate", "DATA", "Finding", "Interval",
+    "KernelEntry", "analyze_fn", "analyze_jaxpr", "certify_analysis",
+    "entries", "resolve_amplifier", "run_rules", "spec_verdict",
+    "static_accum_bound", "summary",
+]

@@ -1,0 +1,149 @@
+"""Deliberately broken kernels — regression fixtures for qlint.
+
+Each fixture seeds exactly one defect class the lint/certify passes must
+catch; ``python -m repro.analysis.qlint --fixtures`` runs ONLY these and
+must exit nonzero (tested in tests/test_qlint.py). They are never
+executed, only traced.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .intervals import Interval
+from .registry import KernelEntry
+
+_M, _K, _N = 8, 256, 128
+
+
+def _pallas(kernel, out_shape, grid, in_specs, out_specs):
+    import jax
+    from jax.experimental import pallas as pl
+
+    def fn(*args):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(*out_shape),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            interpret=True,
+        )(*args)
+
+    return fn
+
+
+def _whole(shape):
+    from jax.experimental import pallas as pl
+
+    rank = len(shape)
+    return pl.BlockSpec(shape, lambda *_: (0,) * rank)
+
+
+def _ints(shape, dtype=np.int8):
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.zeros(shape, dtype))
+
+
+def _fx_fp32_dot():
+    """Float MXU dot on a path registered as integer-scale (Eq. 1 crept
+    back in) -> float-accum-on-is-path."""
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(x_ref, w_ref, o_ref):
+        x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        o_ref[...] = jax.lax.dot_general(
+            x, w, dimension_numbers=(((1,), (0,)), ((), ())))
+
+    fn = _pallas(kernel, (((_M, _N)), jnp.float32), (1,),
+                 [_whole((_M, _K)), _whole((_K, _N))], _whole((_M, _N)))
+    args = (_ints((_M, _K)), _ints((_K, _N)))
+    return fn, args, {0: Interval(-127, 127), 1: Interval(-7, 7)}
+
+
+def _fx_no_preferred():
+    """Integer dot without preferred_element_type=int32: XLA accumulates
+    MXU partials in int8 -> int-dot-preferred-type (+ overflow events)."""
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(x_ref, w_ref, o_ref):
+        o_ref[...] = jax.lax.dot_general(
+            x_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())))
+
+    fn = _pallas(kernel, ((_M, _N), jnp.int8), (1,),
+                 [_whole((_M, _K)), _whole((_K, _N))], _whole((_M, _N)))
+    args = (_ints((_M, _K)), _ints((_K, _N)))
+    return fn, args, {0: Interval(-127, 127), 1: Interval(-7, 7)}
+
+
+def _fx_narrowing():
+    """int32 accumulator squeezed through int16 before the epilogue ->
+    narrowing-convert."""
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(x_ref, w_ref, o_ref):
+        acc = jax.lax.dot_general(
+            x_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        o_ref[...] = acc.astype(jnp.int16).astype(jnp.int32)
+
+    fn = _pallas(kernel, ((_M, _N), jnp.int32), (1,),
+                 [_whole((_M, _K)), _whole((_K, _N))], _whole((_M, _N)))
+    args = (_ints((_M, _K)), _ints((_K, _N)))
+    return fn, args, {0: Interval(-127, 127), 1: Interval(-7, 7)}
+
+
+def _fx_index_map():
+    """Off-by-one m-tile index map (i+1 instead of i) selects a block
+    past the end of the operand -> index-map-bounds."""
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    bm = _M // 2
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    fn = _pallas(kernel, ((_M, _K), jnp.int8), (2,),
+                 [pl.BlockSpec((bm, _K), lambda i: (i + 1, 0))],
+                 pl.BlockSpec((bm, _K), lambda i: (i, 0)))
+    return fn, (_ints((_M, _K)),), {0: Interval(-127, 127)}
+
+
+def _fx_divisibility():
+    """Block shape that does not divide the operand (N=192 vs bn=128) ->
+    blockspec-divisibility."""
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    n, bn = 192, 128
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    fn = _pallas(kernel, ((_M, n), jnp.int8), (2,),
+                 [pl.BlockSpec((_M, bn), lambda j: (0, j))],
+                 pl.BlockSpec((_M, bn), lambda j: (0, j)))
+    return fn, (_ints((_M, n)),), {0: Interval(-127, 127)}
+
+
+def entries() -> list:
+    """All broken fixtures; every one must produce >= 1 finding."""
+    return [
+        KernelEntry("broken-fp32-dot", "float dot on IS path",
+                    _fx_fp32_dot, integer_scale=True, alpha=1024),
+        KernelEntry("broken-no-preferred", "int dot w/o int32 accumulator",
+                    _fx_no_preferred),
+        KernelEntry("broken-narrowing", "int32 acc through int16",
+                    _fx_narrowing),
+        KernelEntry("broken-index-map", "m-tile index map off by one",
+                    _fx_index_map),
+        KernelEntry("broken-divisibility", "192 % 128 != 0",
+                    _fx_divisibility),
+    ]

@@ -1,0 +1,99 @@
+"""qlint CLI — lint + overflow-certify every registered kernel.
+
+Usage (CI gate)::
+
+    PYTHONPATH=src python -m repro.analysis.qlint            # registry
+    PYTHONPATH=src python -m repro.analysis.qlint --fixtures # must fail
+
+Exit status is nonzero iff any lint finding fires or any integer-scale
+kernel's certificate is not ``ok`` (certified / capped-alpha). Unknown
+primitives are printed as warnings — they widen the analysis but are not
+gate failures.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import certify, fixtures, registry
+from .interp import analyze_fn
+from .lint import run_rules
+
+
+def analyze_entry(entry):
+    fn, args, input_ranges = entry.build()
+    return analyze_fn(fn, *args, input_ranges=input_ranges)
+
+
+def check_entry(entry):
+    """-> (findings, certificate | None, analysis)."""
+    an = analyze_entry(entry)
+    findings = run_rules(entry, an)
+    cert = None
+    if entry.integer_scale:
+        cert = certify.certify_analysis(
+            entry.name, entry.config, an, alpha=entry.alpha or 1)
+    return findings, cert, an
+
+
+def run_entries(entries, out=sys.stdout):
+    """Check every entry, print one line each; -> (findings, certs)."""
+    all_findings, certs = [], []
+    for entry in entries:
+        try:
+            findings, cert, an = check_entry(entry)
+        except Exception as e:
+            from .lint import Finding
+
+            findings, cert, an = [Finding(
+                "analysis-error", entry.name,
+                f"{type(e).__name__}: {e}")], None, None
+        all_findings.extend(findings)
+        if cert is not None:
+            certs.append(cert)
+        status = "ok " if not findings and (cert is None or cert.ok) \
+            else "FAIL"
+        tail = ""
+        if cert is not None:
+            tail = (f" bound={cert.bound:.3g}"
+                    f" ({cert.bound / certify.INT32_LIMIT:.3f} of 2^31)"
+                    f" [{cert.verdict}]")
+        print(f"{status} {entry.name:24s} {entry.config}{tail}", file=out)
+        for f in findings:
+            print(f"     - {f}", file=out)
+        if an is not None:
+            for e in an.events_of("unknown-prim"):
+                print(f"     ~ warn: {e.prim}: {e.detail}", file=out)
+    return all_findings, certs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.qlint", description=__doc__)
+    ap.add_argument("--fixtures", action="store_true",
+                    help="run only the deliberately broken fixtures "
+                         "(exit nonzero expected)")
+    ap.add_argument("-k", "--filter", default="",
+                    help="substring filter on kernel names")
+    ns = ap.parse_args(argv)
+
+    entries = fixtures.entries() if ns.fixtures else registry.entries()
+    if ns.filter:
+        entries = [e for e in entries if ns.filter in e.name]
+    if not entries:
+        print("qlint: no entries matched", file=sys.stderr)
+        return 2
+
+    findings, certs = run_entries(entries)
+    bad_certs = [c for c in certs if not c.ok]
+    n = len(findings) + len(bad_certs)
+    s = certify.summary(certs)
+    print(f"qlint: {len(entries)} kernels, {len(findings)} findings, "
+          f"{s['certified']} certified / {s['capped-alpha']} capped / "
+          f"{s['fallback']} fallback, worst accumulator "
+          f"{s['worst_frac']:.3f} of 2^31")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

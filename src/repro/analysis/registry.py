@@ -1,0 +1,275 @@
+"""Kernel/config registry walked by ``python -m repro.analysis.qlint``.
+
+Every Pallas kernel in ``repro.kernels`` is registered here with a
+representative config: deterministic synthetic weights/scales (static
+operands are seeded tight from their concrete values) and contract
+ranges for the data-dependent operands (activations from the a_bits
+range, ragged row counts from the wrapper's [0, C] clamp contract).
+
+How to register a new kernel
+----------------------------
+Append a :class:`KernelEntry` in :func:`entries`:
+
+* ``build`` returns ``(fn, args, input_ranges)`` — ``fn(*args)`` must be
+  traceable by ``jax.make_jaxpr`` (the jitted wrappers are fine);
+  ``input_ranges`` maps arg positions to :class:`Interval` contract
+  ranges (or ``interp.DATA``) for operands whose concrete values are
+  placeholders.
+* set ``integer_scale=True`` (and ``alpha``) iff the kernel carries the
+  Eq. 2 INT32 accumulation — it then gets an overflow certificate and
+  the single-convert lint rule.
+* ragged kernels set ``prefetch_ranges`` so the index-map bounds rule
+  can seed the scalar-prefetch refs.
+
+Shapes are kept small (tracing + interval interpretation run in CI on
+every push) but structurally faithful: multiple k-steps (nk=2) so the
+accumulator carry across the minor grid axis is analyzed, multiple
+groups per block, packed int4 weights, padded+ragged expert slabs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+
+from .interp import DATA
+from .intervals import Interval
+
+# synthetic shapes — small but multi-tile in every dimension that matters
+M, K, N, GS, BK = 8, 512, 256, 128, 256
+E, C = 2, 64
+G = K // GS
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    config: str
+    build: Callable[[], tuple]  # -> (fn, args, input_ranges)
+    integer_scale: bool = False
+    alpha: float | None = None
+    a_bits: int = 8
+    prefetch_ranges: tuple = ()
+    meta: Any = None
+
+
+def _codes(rng, k, n, bits):
+    q = 2 ** (bits - 1) - 1
+    return rng.integers(-q, q + 1, size=(k, n)).astype(np.int8)
+
+
+def _packed(codes4):
+    import jax.numpy as jnp
+
+    from repro.core import packing
+
+    return np.asarray(packing.pack_int4(jnp.asarray(codes4)))
+
+
+def _w4_operands(rng, k=K, n=N, alpha=1024):
+    packed = _packed(_codes(rng, k, n, 4))
+    scales = rng.uniform(0.005, 0.02, (k // GS, n)).astype(np.float32)
+    ints = np.clip(np.round(scales * alpha), 1, 2**31 - 1).astype(np.int32)
+    return packed, scales, ints
+
+
+def _w8_operands(rng, k=K, n=N):
+    """W8 scales are ~18x smaller; amplifier follows the shipped
+    heuristic+6 spec (recipe.W8A8_FG)."""
+    import jax.numpy as jnp
+
+    from repro.core import integer_scale as isc
+
+    codes = _codes(rng, k, n, 8)
+    scales = rng.uniform(8e-4, 1.2e-3, (k // GS, n)).astype(np.float32)
+    exp = int(isc.heuristic_amplifier_exp(jnp.asarray(scales))) + 6
+    alpha = int(2 ** min(exp, isc.MAX_AMPLIFIER_EXP))
+    ints = np.clip(np.round(scales * alpha), 1, 2**31 - 1).astype(np.int32)
+    return codes, scales, ints, alpha
+
+
+def _sa(rng, *lead):
+    return rng.uniform(1e-3, 0.05, (*lead, 1)).astype(np.float32)
+
+
+def _j(x):
+    import jax.numpy as jnp
+
+    return jnp.asarray(x)
+
+
+def _build_dense_is(w_bits: int, a_bits: int):
+    def build():
+        from repro.kernels import w4a8_gemm as W
+
+        rng = np.random.default_rng(0)
+        if w_bits == 4:
+            wq, _, ints = _w4_operands(rng)
+            alpha = 1024.0
+        else:
+            wq, _, ints, alpha = _w8_operands(rng)
+        qa = 2 ** (a_bits - 1) - 1
+        fn = functools.partial(
+            W.fg_gemm_integer_scale, group_size=GS, alpha=float(alpha),
+            w_bits=w_bits, bk=BK)
+        args = (_j(np.zeros((M, K), np.int8)), _j(_sa(rng, M)),
+                _j(wq), _j(ints))
+        return fn, args, {0: Interval(-qa, qa)}
+    return build
+
+
+def _build_dense_fs(group_size: int):
+    def build():
+        from repro.kernels import w4a8_gemm_fscale as W
+
+        rng = np.random.default_rng(1)
+        wq, scales, _ = _w4_operands(rng)
+        if group_size <= 0:
+            scales = scales.max(axis=0, keepdims=True)  # (1, N) coarse
+        fn = functools.partial(
+            W.fg_gemm_float_scale, group_size=group_size, w_bits=4, bk=BK)
+        args = (_j(np.zeros((M, K), np.int8)), _j(_sa(rng, M)),
+                _j(wq), _j(scales))
+        return fn, args, {0: Interval(-127, 127)}
+    return build
+
+
+def _build_w4a16():
+    from repro.kernels import w4a16_gemm as W
+
+    rng = np.random.default_rng(2)
+    wq, scales, _ = _w4_operands(rng)
+    fn = functools.partial(W.w4a16_gemm, group_size=GS, bk=BK)
+    args = (_j(np.zeros((M, K), np.float32)), _j(wq), _j(scales))
+    return fn, args, {0: DATA}
+
+
+def _build_act_quant():
+    from repro.kernels import act_quant as A
+
+    fn = functools.partial(A.act_quant, bits=8)
+    return fn, (_j(np.zeros((64, 256), np.float32)),), {0: DATA}
+
+
+def _build_flash():
+    from repro.kernels import flash_attention as F
+
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(1, 256, 2, 64)).astype(np.float32)
+    k = rng.normal(size=(1, 256, 1, 64)).astype(np.float32)
+    v = rng.normal(size=(1, 256, 1, 64)).astype(np.float32)
+    fn = functools.partial(F.flash_attention_tpu, causal=True, bk=128)
+    return fn, (_j(q), _j(k), _j(v)), {0: DATA, 1: DATA, 2: DATA}
+
+
+def _moe_w4(rng, alpha=1024):
+    packed, ints = [], []
+    for _ in range(E):
+        p, _, i = _w4_operands(rng, alpha=alpha)
+        packed.append(p)
+        ints.append(i)
+    return np.stack(packed), np.stack(ints)
+
+
+def _build_moe_dense(integer: bool):
+    def build():
+        from repro.kernels import moe_gemm as MG
+
+        rng = np.random.default_rng(4)
+        packed, ints = _moe_w4(rng)
+        if integer:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_integer_scale, group_size=GS,
+                alpha=1024.0, w_bits=4, bk=BK)
+            scale_arg = ints
+        else:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_float_scale, group_size=GS,
+                w_bits=4, bk=BK)
+            scale_arg = (ints / 1024.0).astype(np.float32)
+        args = (_j(np.zeros((E, C, K), np.int8)), _j(_sa(rng, E, C)),
+                _j(packed), _j(scale_arg))
+        return fn, args, {0: Interval(-127, 127)}
+    return build
+
+
+def _build_moe_ragged(integer: bool):
+    def build():
+        from repro.kernels import moe_gemm as MG
+
+        rng = np.random.default_rng(5)
+        packed, ints = _moe_w4(rng)
+        rc = np.asarray([37, C], np.int32)
+        if integer:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_integer_scale_ragged, group_size=GS,
+                alpha=1024.0, a_bits=8, w_bits=4, bk=BK)
+            scale_arg = ints
+        else:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_float_scale_ragged, group_size=GS,
+                a_bits=8, w_bits=4, bk=BK)
+            scale_arg = (ints / 1024.0).astype(np.float32)
+        args = (_j(np.zeros((E, C, K), np.float32)), _j(rc),
+                _j(packed), _j(scale_arg))
+        return fn, args, {0: DATA, 1: Interval(0, C)}
+    return build
+
+
+def _build_w4a16_ragged():
+    from repro.kernels import moe_gemm as MG
+
+    rng = np.random.default_rng(6)
+    packed, scales = [], []
+    for _ in range(E):
+        p, s, _ = _w4_operands(rng)
+        packed.append(p)
+        scales.append(s)
+    rc = np.asarray([17, C], np.int32)
+    fn = functools.partial(MG.grouped_w4a16_gemm_ragged, group_size=GS,
+                           bk=BK)
+    args = (_j(np.zeros((E, C, K), np.float32)), _j(rc),
+            _j(np.stack(packed)), _j(np.stack(scales)))
+    return fn, args, {0: DATA, 1: Interval(0, C)}
+
+
+_RC = (Interval(0.0, float(C)),)
+
+
+def entries() -> list:
+    """All shipped kernels x configs, in lint/certify order."""
+    return [
+        KernelEntry("w4a8-is", f"W4A8 g{GS} K={K} alpha=1024 bk={BK}",
+                    _build_dense_is(4, 8), integer_scale=True, alpha=1024),
+        KernelEntry("w8a8-is", f"W8A8 g{GS} K={K} alpha=heuristic+6",
+                    _build_dense_is(8, 8), integer_scale=True),
+        KernelEntry("w4a4-is", f"W4A4 g{GS} K={K} alpha=1024",
+                    _build_dense_is(4, 4), integer_scale=True, alpha=1024,
+                    a_bits=4),
+        KernelEntry("w4a8-fs", f"W4A8 float-scale g{GS} K={K}",
+                    _build_dense_fs(GS)),
+        KernelEntry("w4a8-coarse", f"W4A8 per-channel K={K}",
+                    _build_dense_fs(-1)),
+        KernelEntry("w4a16", f"W4A16 weight-only g{GS} K={K}",
+                    _build_w4a16),
+        KernelEntry("act-quant", "per-token int8, M=64 K=256",
+                    _build_act_quant),
+        KernelEntry("flash-attention", "causal Sq=Sk=256 bq=256 bk=128",
+                    _build_flash),
+        KernelEntry("moe-w4a8-is", f"grouped E={E} C={C} K={K} alpha=1024",
+                    _build_moe_dense(True), integer_scale=True, alpha=1024),
+        KernelEntry("moe-w4a8-fs", f"grouped E={E} C={C} K={K} float-scale",
+                    _build_moe_dense(False)),
+        KernelEntry("moe-w4a8-is-ragged",
+                    f"ragged fused-quant E={E} C={C} K={K} alpha=1024",
+                    _build_moe_ragged(True), integer_scale=True, alpha=1024,
+                    prefetch_ranges=_RC),
+        KernelEntry("moe-w4a8-fs-ragged",
+                    f"ragged fused-quant E={E} C={C} K={K} float-scale",
+                    _build_moe_ragged(False), prefetch_ranges=_RC),
+        KernelEntry("moe-w4a16-ragged",
+                    f"ragged weight-only E={E} C={C} K={K}",
+                    _build_w4a16_ragged, prefetch_ranges=_RC),
+    ]

@@ -22,13 +22,22 @@ from .quant import QWeight, qmax
 
 DEFAULT_AMPLIFIER_EXP = 10  # alpha = 2^10 = 1024, the paper's default (§6.1)
 
+# Largest legal amplifier exponent. alpha = 2^30 keeps int_scale =
+# round(scale * alpha) representable in int32 for any scale < 2 and leaves
+# one bit of headroom before the 2^31 accumulator limit; every clamp on the
+# amplifier path MUST use this single bound (heuristic_amplifier_exp,
+# heuristic_amplifier, integerize previously disagreed: 31 vs 30 vs 30).
+MAX_AMPLIFIER_EXP = 30
+
 
 # ---------------------------------------------------------------------------
 # Adaptive scale amplifier (paper Listing 1)
 # ---------------------------------------------------------------------------
 
 
-def heuristic_amplifier_exp(scales: jax.Array, max_exp: int = 31) -> jax.Array:
+def heuristic_amplifier_exp(
+    scales: jax.Array, max_exp: int = MAX_AMPLIFIER_EXP
+) -> jax.Array:
     """Paper Listing 1: smallest n such that min(scales) * 2^n >= 1; the
     amplifier used is then 2^(n-1)... — we follow the listing exactly:
 
@@ -52,7 +61,7 @@ def heuristic_amplifier_exp(scales: jax.Array, max_exp: int = 31) -> jax.Array:
 def heuristic_amplifier(scales: jax.Array) -> jax.Array:
     # exact integer 2^n (XLA's exp2 is an approximation on some backends —
     # a float path can return 2^27 - 56, which is not a power of two)
-    exp = jnp.clip(heuristic_amplifier_exp(scales), 0, 30)
+    exp = jnp.clip(heuristic_amplifier_exp(scales), 0, MAX_AMPLIFIER_EXP)
     return jnp.left_shift(jnp.int32(1), exp)
 
 
@@ -106,11 +115,15 @@ def integerize(
         # extra bits buy precision while the overflow audit verifies safety).
         margin = int(amplifier.split("+")[1]) if "+" in amplifier else 0
         exp = int(heuristic_amplifier_exp(qw.scale)) + margin
-        alpha = int(2 ** min(exp, 30))
+        alpha = int(2 ** min(exp, MAX_AMPLIFIER_EXP))
     else:
         alpha = int(amplifier)
         if alpha < 1 or (alpha & (alpha - 1)) != 0:
             raise ValueError(f"amplifier must be a power of two, got {alpha}")
+        if alpha > 2**MAX_AMPLIFIER_EXP:
+            raise ValueError(
+                f"amplifier {alpha} exceeds 2^{MAX_AMPLIFIER_EXP}; larger "
+                "amplifiers are not int32-representable")
     int_scale = jnp.clip(
         jnp.round(qw.scale.astype(jnp.float32) * alpha), 1, 2**31 - 1
     ).astype(jnp.int32)

@@ -125,6 +125,8 @@ def post_training_quantize(api: ModelApi, cfg: ModelConfig, fp_params: Any,
     if needs_calib and calib_batches:
         captured = collect_calibration(api, cfg, fp_params, calib_batches)
 
+    from repro.analysis import certify
+
     def walk(fp_node, spec_node, path):
         if isinstance(spec_node, dict) and "qvalue" in spec_node:
             # model declared this node quantized
@@ -132,31 +134,48 @@ def post_training_quantize(api: ModelApi, cfg: ModelConfig, fp_params: Any,
             assert spec is not None, path
             w = np.asarray(fp_node["w"], np.float32)
             bias = fp_node.get("b")
-            if w.ndim == 2:
-                x = _calib_for(captured, path, None, 1)
-                return quantize_one(w, x, spec, bias=bias)
-            if w.ndim == 3:  # scanned layers OR experts: per-slice calib
-                L = w.shape[0]
-                outs = [quantize_one(
-                    w[i], _calib_for(captured, path, i, L), spec,
-                    bias=(bias[i] if bias is not None else None), seed=i)
-                    for i in range(L)]
-                return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-            # >=4D (scanned MoE: layers x experts x K x N): RTN+IS per slice
-            lead = w.shape[:-2]
-            flat = w.reshape(-1, *w.shape[-2:])
-            bflat = (np.asarray(bias).reshape(-1, bias.shape[-1])
-                     if bias is not None else None)
-            outs = [quantize_one(
-                flat[i], np.zeros((0, 0), np.float32), spec,
-                bias=(bflat[i] if bflat is not None else None), seed=i)
-                for i in range(flat.shape[0])]
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-            return jax.tree.map(
-                lambda a: a.reshape(*lead, *a.shape[1:]), stacked)
+            with certify.context(path):
+                return _quantize_node(w, bias, spec, path, captured)
         if isinstance(spec_node, dict):
             return {k: walk(fp_node[k], v, f"{path}/{k}" if path else k)
                     for k, v in spec_node.items()}
         return fp_node
 
-    return walk(fp_params, qspec_tree, "")
+    n_before = len(certify.log())
+    out = walk(fp_params, qspec_tree, "")
+    certs = certify.log()[n_before:]
+    if certs:
+        s = certify.summary(certs)
+        print(f"[ptq] overflow certificates: {s['certified']} certified / "
+              f"{s['capped-alpha']} capped-alpha / {s['fallback']} fallback"
+              f" (worst accumulator {s['worst_frac']:.3f} of 2^31)")
+        for c in certs:
+            if c.verdict != "certified":
+                print(f"[ptq]   {c}")
+    return out
+
+
+def _quantize_node(w, bias, spec, path, captured):
+    """Quantize one declared-quantized node (2D / scanned 3D / >=4D)."""
+    if w.ndim == 2:
+        x = _calib_for(captured, path, None, 1)
+        return quantize_one(w, x, spec, bias=bias)
+    if w.ndim == 3:  # scanned layers OR experts: per-slice calib
+        L = w.shape[0]
+        outs = [quantize_one(
+            w[i], _calib_for(captured, path, i, L), spec,
+            bias=(bias[i] if bias is not None else None), seed=i)
+            for i in range(L)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    # >=4D (scanned MoE: layers x experts x K x N): RTN+IS per slice
+    lead = w.shape[:-2]
+    flat = w.reshape(-1, *w.shape[-2:])
+    bflat = (np.asarray(bias).reshape(-1, bias.shape[-1])
+             if bias is not None else None)
+    outs = [quantize_one(
+        flat[i], np.zeros((0, 0), np.float32), spec,
+        bias=(bflat[i] if bflat is not None else None), seed=i)
+        for i in range(flat.shape[0])]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.tree.map(
+        lambda a: a.reshape(*lead, *a.shape[1:]), stacked)

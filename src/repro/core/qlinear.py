@@ -96,6 +96,27 @@ def linear_specs(
 # ---------------------------------------------------------------------------
 
 
+def _certify_amplifier(scales, alpha: int, qspec: QuantSpec):
+    """Static INT32-overflow certificate for this layer's amplifier.
+
+    Returns the Certificate (also appended to repro.analysis.certify's
+    log), or None when the scales are traced (inside jit/vmap the
+    concrete values don't exist; certification then happens at the
+    recipe/registry level instead).
+    """
+    import numpy as np
+
+    try:
+        s = np.asarray(scales)
+    except Exception:  # traced values (TracerArrayConversionError etc.)
+        return None
+    from repro.analysis import certify
+
+    return certify.resolve_amplifier(
+        s, alpha=int(alpha), group_size=qspec.group_size,
+        w_bits=qspec.w_bits, a_bits=qspec.a_bits)
+
+
 def finish_quant(
     codes: jax.Array,   # int8 (K, N) quantized codes
     scales: jax.Array,  # f32 (G, N) (G=1 for coarse)
@@ -115,6 +136,10 @@ def finish_quant(
         # coarse specs keep the single float scale (nothing to amortize).
         qw = QWeight(codes, scales, qspec.w_bits, qspec.group_size)
         isw = integerize(qw, qspec.amplifier)
+        cert = _certify_amplifier(scales, isw.alpha, qspec)
+        if cert is not None and cert.resolved_alpha != isw.alpha:
+            # statically unsafe amplifier: rebuild at the certified cap
+            isw = integerize(qw, cert.resolved_alpha)
         out["scale"] = isw.int_scale
         out["alpha"] = jnp.float32(isw.alpha)
     else:

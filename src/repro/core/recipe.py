@@ -88,3 +88,23 @@ LLAMA3_RECIPE = QuantRecipe(
 DEFAULT_RECIPE = QuantRecipe()
 FLOAT_SCALE_RECIPE = QuantRecipe(rules=(("*", W4A8_FS),), name="w4a8-fs")
 WEIGHT_ONLY_RECIPE = QuantRecipe(rules=(("*", W4A16_FG),), name="w4a16-fg")
+
+
+def certify_recipe(recipe: QuantRecipe, dims: dict[str, int]) -> dict:
+    """Static overflow verdict per (rule, contraction dim), no tensors.
+
+    ``dims`` maps a label (e.g. "d_model", "d_ff") to a contraction size
+    K. Returns {f"{pattern}@{label}": verdict} using the data-free scale
+    contract of :func:`repro.analysis.certify.spec_verdict` — verdicts
+    are "certified" / "capped-alpha" / "fallback" / "data-dependent"
+    (heuristic amplifiers resolve per layer at quantization time) /
+    "n/a" (no INT32 accumulation to certify). Quantization itself
+    (qlinear.finish_quant) re-certifies with the layer's real scales.
+    """
+    from repro.analysis import certify
+
+    out = {}
+    for pat, spec in recipe.rules:
+        for label, K in dims.items():
+            out[f"{pat}@{label}"] = certify.spec_verdict(spec, int(K))
+    return out

@@ -203,6 +203,28 @@ def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
     return lower, cfg
 
 
+_VERDICT_RANK = ("fallback", "capped-alpha", "data-dependent", "certified",
+                 "n/a")
+
+
+def qcert_for(cfg) -> dict:
+    """Static overflow verdicts for the serve recipe at this arch's
+    contraction sizes (repro.analysis certificates, no tensors)."""
+    from repro.core.recipe import certify_recipe
+
+    dims = {"d_model": cfg.d_model, "d_ff": cfg.d_ff}
+    if getattr(cfg, "moe_d_ff", 0):
+        dims["moe_d_ff"] = cfg.moe_d_ff
+    return certify_recipe(DEFAULT_RECIPE, dims)
+
+
+def _qcert_worst(verdicts: dict) -> str:
+    real = [v for v in verdicts.values() if v != "n/a"]
+    if not real:
+        return "n/a"
+    return min(real, key=_VERDICT_RANK.index)
+
+
 def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
              collect_hlo: bool = True, cfg_overrides: dict | None = None,
              rules=None, token_sharding=None) -> dict:
@@ -246,6 +268,11 @@ def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
                 "transcendentals": float(cost.get("transcendentals", 0.0)),
             },
         )
+        if shp.kind != "train":
+            # serve cells run the quantized recipe: attach the static
+            # overflow-certificate verdicts for its contraction sizes
+            rec["qcert"] = qcert_for(cfg2)
+            rec["qcert_worst"] = _qcert_worst(rec["qcert"])
         if collect_hlo:
             txt = compiled.as_text()
             rec["collectives"] = parse_collectives(txt)
@@ -296,6 +323,8 @@ def main() -> None:
                                  f"flops/dev={rec['cost']['flops']:.3g} "
                                  f"lower={rec['lower_s']}s "
                                  f"compile={rec['compile_s']}s")
+                        if "qcert_worst" in rec:
+                            extra += f" qcert={rec['qcert_worst']}"
                     print(f"[{rec['mesh']}] {arch} x {shape}: {tag} "
                           f"{extra}{msg}", flush=True)
     print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")

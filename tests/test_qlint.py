@@ -1,0 +1,170 @@
+"""repro.analysis: analyzer soundness, lint fixtures, amplifier capping."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.analysis import certify, fixtures, qlint, registry
+from repro.analysis.intervals import Interval
+from repro.core import integer_scale as isc
+from repro.core import qlinear
+from repro.core.quant import QWeight
+from repro.core.recipe import (DEFAULT_RECIPE, W4A8_FS, W8A8_FG, QuantSpec,
+                               certify_recipe)
+
+# ---------------------------------------------------------------------------
+# interval domain
+# ---------------------------------------------------------------------------
+
+
+def test_interval_floordiv_exact():
+    assert Interval(0, 1).floordiv(Interval.point(2)) == Interval(0.0, 0.0)
+    assert Interval(-3, 5).floordiv(Interval.point(2)) == Interval(-2.0, 2.0)
+    assert Interval(0, 7).floordiv(Interval(0, 2)) == Interval.top()
+
+
+def test_interval_nan_corners_widen():
+    inf = float("inf")
+    # inf - inf corner must widen, not assert
+    r = Interval(-inf, inf) - Interval(-inf, inf)
+    assert r.lo == -inf and r.hi == inf
+    r = Interval(-inf, inf).truediv(Interval(1, inf))
+    assert r.lo == -inf and r.hi == inf
+
+
+# ---------------------------------------------------------------------------
+# static bound soundness: dominates the empirical max accumulation
+# ---------------------------------------------------------------------------
+
+
+def _random_case(rng, w_bits, G, gs, alpha):
+    K, N, T = G * gs, 8, 16
+    qw_max = 2 ** (w_bits - 1) - 1
+    codes = rng.integers(-qw_max, qw_max + 1, (K, N)).astype(np.int8)
+    scales = rng.uniform(1e-4, 0.05, (G, N)).astype(np.float32)
+    isw = isc.integerize(
+        QWeight(jnp.asarray(codes), jnp.asarray(scales), w_bits, gs), alpha)
+    xq = rng.integers(-127, 128, (T, K)).astype(np.int8)
+    return xq, isw
+
+
+def _assert_dominates(w_bits, G, gs, alpha_exp, seed):
+    rng = np.random.default_rng(seed)
+    xq, isw = _random_case(rng, w_bits, G, gs, 2 ** alpha_exp)
+    bound = certify.static_accum_bound(
+        np.asarray(isw.int_scale), group_size=gs, w_bits=w_bits)
+    emp = int(isc.empirical_max_accum(xq, isw))
+    assert bound >= emp, (w_bits, G, gs, alpha_exp, bound, emp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w_bits=st.sampled_from([4, 8]), G=st.integers(1, 4),
+       gs=st.sampled_from([64, 128]), alpha_exp=st.integers(4, 14),
+       seed=st.integers(0, 2**31 - 1))
+def test_static_bound_dominates_empirical_prop(w_bits, G, gs, alpha_exp,
+                                               seed):
+    _assert_dominates(w_bits, G, gs, alpha_exp, seed)
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_static_bound_dominates_empirical(case):
+    """Seeded sweep (runs even without hypothesis installed)."""
+    rng = np.random.default_rng(case)
+    _assert_dominates(int(rng.choice([4, 8])), int(rng.integers(1, 5)),
+                      int(rng.choice([64, 128])),
+                      int(rng.integers(4, 15)), case)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: deliberately broken kernels must be flagged
+# ---------------------------------------------------------------------------
+
+_EXPECT = {
+    "broken-fp32-dot": "float-accum-on-is-path",
+    "broken-no-preferred": "int-dot-preferred-type",
+    "broken-narrowing": "narrowing-convert",
+    "broken-index-map": "index-map-bounds",
+    "broken-divisibility": "blockspec-divisibility",
+}
+
+
+@pytest.mark.parametrize("entry", fixtures.entries(),
+                         ids=lambda e: e.name)
+def test_broken_fixture_flagged(entry):
+    findings, _, _ = qlint.check_entry(entry)
+    assert findings, f"{entry.name}: no findings"
+    rules = {f.rule for f in findings}
+    assert _EXPECT[entry.name] in rules, (entry.name, rules)
+
+
+def test_qlint_cli_fixtures_exit_nonzero(capsys):
+    assert qlint.main(["--fixtures"]) != 0
+    capsys.readouterr()
+
+
+def test_qlint_cli_clean_subset(capsys):
+    # w4a4 entry: full Pallas trace + certification, zero findings
+    assert qlint.main(["-k", "w4a4"]) == 0
+    out = capsys.readouterr().out
+    assert "certified" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("entry", registry.entries(),
+                         ids=lambda e: e.name)
+def test_registry_kernel_clean(entry):
+    findings, cert, _ = qlint.check_entry(entry)
+    assert not findings, [str(f) for f in findings]
+    if cert is not None:
+        assert cert.verdict == "certified", str(cert)
+
+
+# ---------------------------------------------------------------------------
+# finish_quant wiring: statically unsafe amplifiers are capped
+# ---------------------------------------------------------------------------
+
+
+def test_finish_quant_caps_unsafe_amplifier():
+    G, gs, N = 4, 128, 8
+    codes = jnp.ones((G * gs, N), jnp.int8) * 7
+    scales = jnp.full((G, N), 0.01, jnp.float32)
+    spec = QuantSpec(amplifier=2**20)
+    certify.clear_log()
+    out = qlinear.finish_quant(codes, scales, spec)
+    cert = certify.log()[-1]
+    assert cert.verdict == "capped-alpha"
+    # largest safe power of two for these scales: 2^18
+    assert int(out["alpha"]) == 2**18 == cert.resolved_alpha
+    np.testing.assert_array_equal(
+        np.asarray(out["scale"]), np.full((G, N), round(0.01 * 2**18)))
+    assert cert.bound < 2**31
+
+
+def test_finish_quant_default_alpha_certified():
+    G, gs, N = 4, 128, 8
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-7, 8, (G * gs, N)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(0.005, 0.02, (G, N)), jnp.float32)
+    certify.clear_log()
+    out = qlinear.finish_quant(codes, scales, QuantSpec())
+    cert = certify.log()[-1]
+    assert cert.verdict == "certified"
+    assert int(out["alpha"]) == 1024
+
+
+# ---------------------------------------------------------------------------
+# spec/recipe-level verdicts (dry-run surface)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_verdicts():
+    assert certify.spec_verdict(QuantSpec(), 512) == "certified"
+    assert certify.spec_verdict(W4A8_FS, 512) == "n/a"
+    assert certify.spec_verdict(W8A8_FG, 512) == "data-dependent"
+    assert certify.spec_verdict(None, 512) == "n/a"
+    assert certify.spec_verdict(QuantSpec(), 100) == "n/a"  # K % gs
+
+
+def test_certify_recipe_default():
+    v = certify_recipe(DEFAULT_RECIPE, {"d_model": 256, "d_ff": 512})
+    assert v == {"*@d_model": "certified", "*@d_ff": "certified"}

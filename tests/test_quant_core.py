@@ -121,6 +121,35 @@ def test_integerize_rejects_bad_amplifier():
         isc.integerize(quant.quantize_weight(w, 4, -1), 1024)  # coarse
 
 
+def test_amplifier_exp_clamp_unified_at_2_30():
+    """Every clamp on the amplifier path uses MAX_AMPLIFIER_EXP = 30
+    (heuristic_amplifier_exp used to clip at 31, which heuristic_amplifier
+    and integerize then re-clipped to 30 — a silent disagreement)."""
+    assert isc.MAX_AMPLIFIER_EXP == 30
+    tiny = jnp.asarray([1e-30, 1e-30], jnp.float32)
+    exp = int(isc.heuristic_amplifier_exp(tiny))
+    assert exp == isc.MAX_AMPLIFIER_EXP
+    # the int32 left-shift stays positive and equals 2^exp exactly
+    alpha = int(isc.heuristic_amplifier(tiny))
+    assert alpha == 2**isc.MAX_AMPLIFIER_EXP > 0
+
+    # heuristic string path: margin bits cannot push past the bound
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-7, 8, size=(128, 8)).astype(np.int8)
+    qw = quant.QWeight(jnp.asarray(codes), jnp.full((1, 8), 1e-30), 4, 128)
+    isw = isc.integerize(qw, "heuristic+6")
+    assert isw.alpha == 2**isc.MAX_AMPLIFIER_EXP
+
+    # explicit alpha = 2^30 is the edge of legality; 2^31 is rejected
+    qw2 = quant.quantize_weight(jnp.ones((128, 8)) * 1e-6, 4, 128)
+    isw2 = isc.integerize(qw2, 2**30)
+    assert isw2.alpha == 2**30
+    assert int(jnp.min(isw2.int_scale)) >= 1
+    assert int(jnp.max(isw2.int_scale)) <= 2**31 - 1
+    with pytest.raises(ValueError):
+        isc.integerize(qw2, 2**31)
+
+
 # ---------------------------------------------------------------------------
 # qlinear end-to-end schemes
 # ---------------------------------------------------------------------------
