@@ -55,9 +55,7 @@ def run(report: Report, fast: bool = False) -> None:
 
     # --- grouped Pallas route (interpret): same models, same tokens -------
     grouped: dict = {}
-    prev_mode = qlinear.default_kernel_mode()
-    qlinear.set_default_kernel_mode("pallas_interpret")
-    try:
+    with qlinear.kernel_mode("pallas_interpret"):
         for name, (qp, recipe) in qps.items():
             logits, _, _ = api.apply(qp, cfg, toks, recipe=recipe,
                                      mode="train")
@@ -71,8 +69,6 @@ def run(report: Report, fast: bool = False) -> None:
                        f"relerr={rel_fp:.4f}")
             report.add(f"moe/grouped-vs-vmapped-{name}", 0.0,
                        f"relerr={rel_route:.4f}")
-    finally:
-        qlinear.set_default_kernel_mode(prev_mode)
     dg = float(jnp.linalg.norm(grouped["integer"] - grouped["float"])
                / jnp.linalg.norm(grouped["float"]))
     report.add("moe/grouped-is-vs-fs", 0.0,

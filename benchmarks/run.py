@@ -29,6 +29,7 @@ MODULES = [
     "kernel_latency",
     "overflow_audit",
     "moe_e2e",
+    "serving_moe",
     "roofline",
 ]
 

@@ -41,6 +41,11 @@ from .intervals import Interval
 M, K, N, GS, BK = 8, 512, 256, 128, 256
 E, C = 2, 64
 G = K // GS
+# engine decode shapes: the continuous-batching decode tick routes at most
+# max_slots * top_k tokens, so per-expert capacity snaps to the 8-row floor
+# — the grouped call the serving path issues every tick is certified at
+# this small-M config (incl. a zero-routed expert in the rep row counts).
+E_DEC, C_DEC = 4, 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +223,33 @@ def _build_moe_ragged(integer: bool):
     return build
 
 
+def _build_moe_ragged_decode(integer: bool):
+    def build():
+        from repro.kernels import moe_gemm as MG
+
+        rng = np.random.default_rng(7)
+        packed, ints = [], []
+        for _ in range(E_DEC):
+            p, _, i = _w4_operands(rng)
+            packed.append(p)
+            ints.append(i)
+        rc = np.asarray([0, 3, C_DEC, 5], np.int32)  # incl. idle expert
+        if integer:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_integer_scale_ragged, group_size=GS,
+                alpha=1024.0, a_bits=8, w_bits=4, bk=BK)
+            scale_arg = np.stack(ints)
+        else:
+            fn = functools.partial(
+                MG.fg_grouped_gemm_float_scale_ragged, group_size=GS,
+                a_bits=8, w_bits=4, bk=BK)
+            scale_arg = (np.stack(ints) / 1024.0).astype(np.float32)
+        args = (_j(np.zeros((E_DEC, C_DEC, K), np.float32)), _j(rc),
+                _j(np.stack(packed)), _j(scale_arg))
+        return fn, args, {0: DATA, 1: Interval(0, C_DEC)}
+    return build
+
+
 def _build_w4a16_ragged():
     from repro.kernels import moe_gemm as MG
 
@@ -236,6 +268,7 @@ def _build_w4a16_ragged():
 
 
 _RC = (Interval(0.0, float(C)),)
+_RC_DEC = (Interval(0.0, float(C_DEC)),)
 
 
 def entries() -> list:
@@ -272,4 +305,12 @@ def entries() -> list:
         KernelEntry("moe-w4a16-ragged",
                     f"ragged weight-only E={E} C={C} K={K}",
                     _build_w4a16_ragged, prefetch_ranges=_RC),
+        KernelEntry("moe-w4a8-is-ragged-decode",
+                    f"engine decode E={E_DEC} C={C_DEC} K={K} alpha=1024",
+                    _build_moe_ragged_decode(True), integer_scale=True,
+                    alpha=1024, prefetch_ranges=_RC_DEC),
+        KernelEntry("moe-w4a8-fs-ragged-decode",
+                    f"engine decode E={E_DEC} C={C_DEC} K={K} float-scale",
+                    _build_moe_ragged_decode(False),
+                    prefetch_ranges=_RC_DEC),
     ]

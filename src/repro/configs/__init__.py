@@ -9,6 +9,7 @@ from . import (  # noqa: F401
     minicpm3_4b,
     llama32_3b,
     phi35_moe,
+    mixtral_8x7b,
     deepseek_v2,
     llama32_vision_90b,
     xlstm_1b3,

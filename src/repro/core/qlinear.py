@@ -13,6 +13,8 @@ for dry-run lowering and CPU tests) and the Pallas TPU kernels in
 """
 from __future__ import annotations
 
+import contextlib
+import warnings
 from typing import Any, Literal
 
 import jax
@@ -26,17 +28,52 @@ from .recipe import QuantSpec
 
 KernelMode = Literal["reference", "pallas", "pallas_interpret"]
 
-# Module-level default; launch/dryrun and tests override per-call.
-_DEFAULT_MODE: KernelMode = "reference"
+# The mode is threaded explicitly: ModelConfig.kernel_mode -> apply_linear /
+# expert_linear_apply -> here, and the serving engine sets it on its
+# ServeConfig. ``kernel_mode`` below is a scoped shim for scripts that used
+# the old process-wide ``set_default_kernel_mode`` setter.
+_MODE_STACK: list[KernelMode] = []
+
+
+@contextlib.contextmanager
+def kernel_mode(mode: KernelMode):
+    """Scoped default kernel mode for call sites that don't pass ``mode``.
+
+    Prefer threading the mode explicitly (ModelConfig.kernel_mode /
+    ServeConfig.kernel_mode / the ``mode=`` kwarg); this context manager
+    exists so scripts and benchmarks keep a one-liner.
+    """
+    if mode not in ("reference", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown kernel mode {mode!r}")
+    _MODE_STACK.append(mode)
+    try:
+        yield
+    finally:
+        _MODE_STACK.pop()
+
+
+def current_kernel_mode() -> KernelMode:
+    """Mode used when a call site passes ``mode=None``."""
+    return _MODE_STACK[-1] if _MODE_STACK else "reference"
 
 
 def set_default_kernel_mode(mode: KernelMode) -> None:
-    global _DEFAULT_MODE
-    _DEFAULT_MODE = mode
+    """Deprecated: use ``with qlinear.kernel_mode(mode):`` or pass ``mode=``
+    explicitly. Kept one release as an unscoped push (no restore)."""
+    warnings.warn(
+        "set_default_kernel_mode is deprecated; use the kernel_mode() "
+        "context manager or pass mode= explicitly", DeprecationWarning,
+        stacklevel=2)
+    _MODE_STACK.clear()
+    if mode != "reference":
+        _MODE_STACK.append(mode)
 
 
 def default_kernel_mode() -> KernelMode:
-    return _DEFAULT_MODE
+    """Deprecated alias of :func:`current_kernel_mode`."""
+    warnings.warn("default_kernel_mode is deprecated; use "
+                  "current_kernel_mode", DeprecationWarning, stacklevel=2)
+    return current_kernel_mode()
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +225,7 @@ def linear_apply(
 
     x: (..., K) activation (bf16/f32). Returns same float dtype as x.
     """
-    mode = mode or _DEFAULT_MODE
+    mode = mode or current_kernel_mode()
     if qspec is None:
         y = x @ params["w"].astype(x.dtype)
         if "b" in params:
@@ -208,11 +245,12 @@ def linear_apply(
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        # qgemm_from_params forwards the stored per-layer ``alpha`` —
-        # calling qgemm without it silently fell back to the qspec default
-        # and rescaled heuristic-amplifier layers by the wrong constant.
-        y2 = kops.qgemm_from_params(
-            x2, params, qspec, interpret=(mode == "pallas_interpret"),
+        # the param dict carries the stored per-layer ``alpha`` — qgemm
+        # forwards it, so heuristic-amplifier layers use their certified
+        # value rather than any static qspec fallback.
+        y2 = kops.qgemm(
+            x2, params, qspec,
+            block=kops.BlockConfig(interpret=(mode == "pallas_interpret")),
         )
     else:
         y2 = _reference_qgemm(x2, params, qspec, K)
@@ -274,7 +312,7 @@ def grouped_linear_apply(
     compensation (``pre_scale``), rotation (``rot``) and bias are applied
     once here so both branches share the exact same semantics.
     """
-    mode = mode or _DEFAULT_MODE
+    mode = mode or current_kernel_mode()
     if qspec is None:
         y = jnp.einsum("eck,ekn->ecn", x, params["w"].astype(x.dtype))
         if "b" in params:
@@ -293,9 +331,9 @@ def grouped_linear_apply(
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
 
-        y = kops.qgemm_grouped_from_params(
+        y = kops.qgemm_grouped(
             x2, core, qspec, row_counts=row_counts,
-            interpret=(mode == "pallas_interpret"))
+            block=kops.BlockConfig(interpret=(mode == "pallas_interpret")))
     else:
         K = x.shape[-1]
         y = jax.vmap(

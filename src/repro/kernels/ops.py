@@ -1,19 +1,57 @@
 """Public jit'd wrappers over the Pallas kernels, plus scheme dispatch.
 
-``qgemm`` is the single entry point used by ``repro.core.qlinear`` when the
-kernel mode is "pallas" / "pallas_interpret": it routes a (QuantSpec,
-operands) pair to the right kernel. ``qgemm_grouped`` is the batched-expert
-analogue used by the MoE layer: stacked (E, ...) operands, one fused
-grouped kernel instead of a vmap over experts. On this CPU container only
-``interpret=True`` executes; the BlockSpecs/grids are identical either way.
+Call convention (v2)
+--------------------
+Two scheme-dispatched entry points, both consuming a qlinear param dict
+directly (the dict ``qlinear.finish_quant`` / ``quantize_linear`` build:
+``{"qvalue", "scale", "alpha"?}``) plus a :class:`BlockConfig`:
 
-``alpha`` (the integer-scale amplifier) may be a python float (static,
-baked into the kernel epilogue) or a traced f32 scalar / (E,) array (the
-per-layer / per-expert values stored in the param dict) — traced values are
-folded into the per-token activation scale, which is exact for the
-power-of-two amplifiers Listing 1 produces.
+* ``qgemm(x, params, qspec, block=...)`` — dense (M, K) x (K, N), the
+  entry point ``repro.core.qlinear.linear_apply`` uses under kernel mode
+  "pallas" / "pallas_interpret".
+* ``qgemm_grouped(x, params, qspec, row_counts=..., block=...)`` — the
+  batched-expert MoE path: stacked (E, ...) operands, ONE fused ragged
+  grouped kernel instead of a vmap over experts. ``row_counts`` (int32
+  ``(E,)``, traced or concrete) lets the scalar-prefetch kernels skip
+  m-tiles past each expert's routed token count — the continuous-batching
+  decode path threads the live per-tick dispatch counts here.
+
+``params["alpha"]`` (the integer-scale amplifier) may be a python float
+(static, baked into the kernel epilogue) or a traced f32 scalar / (E,)
+array (the per-layer / per-expert values stored by quantization) — traced
+values are folded into the per-token activation scale, which is exact for
+the power-of-two amplifiers Listing 1 produces. When absent, the fallback
+is derived from ``qspec.amplifier``; heuristic amplifiers have no static
+value and raise instead of silently rescaling by a wrong constant (the
+stored alpha is what the PR-3 overflow certificates cover).
+
+On this CPU container only ``BlockConfig(interpret=True)`` executes; the
+BlockSpecs/grids are identical either way.
+
+Migration from the v1 API (one release of shims)
+------------------------------------------------
+==============================================  ===============================================
+old                                             new
+==============================================  ===============================================
+``qgemm(x, qvalue, scale, qspec, alpha=a)``     ``qgemm(x, {"qvalue": qvalue, "scale": scale,``
+                                                ``          "alpha": a}, qspec)``
+``qgemm_from_params(x, params, qspec)``         ``qgemm(x, params, qspec)``
+``qgemm_grouped(x, qvalue, scale, qspec)``      ``qgemm_grouped(x, params, qspec)``
+``qgemm_grouped_from_params(x, params, ...)``   ``qgemm_grouped(x, params, ...)``
+``interpret=True``                              ``block=BlockConfig(interpret=True)``
+``block=dict(bm=.., bn=.., bk=..)``             ``block=BlockConfig(bm=.., bn=.., bk=..)``
+==============================================  ===============================================
+
+Every legacy form still works but emits a ``DeprecationWarning``; the
+``*_from_params`` names and the dict/positional forms will be removed next
+release. The kernel mode itself ("reference" vs "pallas"[_interpret]) is
+NOT chosen here — callers pass it explicitly to ``qlinear.linear_apply`` /
+``grouped_linear_apply`` (see ``qlinear.kernel_mode`` for the script shim).
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,79 +67,151 @@ from .w4a8_gemm_fscale import fg_gemm_float_scale
 from .w4a16_gemm import w4a16_gemm
 
 
-def _default_alpha(qspec: QuantSpec) -> float:
-    return float(qspec.amplifier) if isinstance(qspec.amplifier, int) \
-        else 1024.0
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Kernel launch configuration: BlockSpec tile sizes + interpret mode.
+
+    Divisibility is validated at construction (not at the first traced
+    call): ``bm`` must be a multiple of 8 (the f32 sublane tile — the
+    kernels snap it down to ``round_up(C, 8)`` for small decode batches),
+    ``bn``/``bk`` multiples of 128 (the lane tile; ``bk`` must also hold
+    whole quantization groups, which the kernels enforce against the
+    qspec's ``group_size`` since that is a property of the weights, not of
+    the launch). The defaults mirror every GEMM kernel's own defaults.
+    """
+
+    bm: int = 128
+    bn: int = 256
+    bk: int = 512
+    interpret: bool = False
+
+    def __post_init__(self):
+        for name, val, mult in (("bm", self.bm, 8), ("bn", self.bn, 128),
+                                ("bk", self.bk, 128)):
+            if not isinstance(val, int) or val <= 0 or val % mult:
+                raise ValueError(
+                    f"BlockConfig.{name}={val!r}: must be a positive "
+                    f"multiple of {mult} (BlockSpec tile divisibility)")
+
+    def kernel_kwargs(self) -> dict:
+        """Splat into the underlying Pallas wrapper call."""
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk,
+                "interpret": self.interpret}
+
+
+#: Default launch config for CPU-validated kernels (tests/benchmarks).
+INTERPRET = BlockConfig(interpret=True)
+
+
+def _as_block(block, interpret=None) -> BlockConfig:
+    """Coerce None | legacy dict | BlockConfig (+ interpret override)."""
+    if block is None:
+        blk = BlockConfig()
+    elif isinstance(block, BlockConfig):
+        blk = block
+    elif isinstance(block, dict):
+        warnings.warn(
+            "block=dict(...) is deprecated; pass kernels.ops.BlockConfig",
+            DeprecationWarning, stacklevel=3)
+        blk = BlockConfig(**block)
+    else:
+        raise TypeError(f"block must be BlockConfig or None, got "
+                        f"{type(block).__name__}")
+    if interpret is not None and interpret != blk.interpret:
+        blk = dataclasses.replace(blk, interpret=bool(interpret))
+    return blk
+
+
+def _resolve_alpha(alpha, qspec: QuantSpec):
+    """Amplifier for the integer-scale epilogue.
+
+    The stored per-layer/per-expert ``params["alpha"]`` always wins — it is
+    the value the PR-3 overflow certificate covers (possibly capped below
+    the qspec's request). Without it, a static integer ``qspec.amplifier``
+    is an exact fallback; heuristic amplifiers resolve per layer at
+    quantization time, so silently substituting a constant would rescale
+    the output by an arbitrary factor AND bypass certification — raise.
+    """
+    if alpha is not None:
+        return alpha
+    if isinstance(qspec.amplifier, int):
+        return float(qspec.amplifier)
+    raise ValueError(
+        f"qspec.amplifier={qspec.amplifier!r} is resolved per layer at "
+        "quantization time; pass the stored per-layer alpha "
+        "(params['alpha']) — no static fallback exists for heuristic "
+        "amplifiers")
+
+
+def _legacy_params(qvalue, scale, alpha) -> dict:
+    params = {"qvalue": qvalue, "scale": scale}
+    if alpha is not None:
+        params["alpha"] = alpha
+    return params
 
 
 def qgemm(
     x: jax.Array,         # (M, K) bf16/f32 activations
-    qvalue: jax.Array,    # packed/int8 weights
-    scale: jax.Array,     # int32 or f32 scales per scheme
-    qspec: QuantSpec,
-    *,
-    alpha=None,           # float | traced f32 scalar | None
-    interpret: bool = False,
-    block: dict | None = None,
+    params: dict,         # qlinear param dict: qvalue, scale, alpha?
+    qspec: QuantSpec = None,
+    *legacy,
+    alpha=None,
+    interpret: bool | None = None,
+    block: BlockConfig | dict | None = None,
 ) -> jax.Array:
-    """Quantized GEMM honoring ``qspec``; returns f32 (M, N)."""
-    blk = block or {}
+    """Quantized GEMM honoring ``qspec``; returns f32 (M, N).
+
+    Scheme dispatch (weight-only W4A16 / fine-grained integer scale /
+    float scale) comes from the qspec; operands from the param dict.
+    """
+    if legacy:  # v1 positional form: qgemm(x, qvalue, scale, qspec, ...)
+        warnings.warn(
+            "qgemm(x, qvalue, scale, qspec) is deprecated; pass the param "
+            "dict: qgemm(x, {'qvalue': .., 'scale': .., 'alpha': ..}, "
+            "qspec)", DeprecationWarning, stacklevel=2)
+        if len(legacy) != 1:
+            raise TypeError(f"qgemm takes (x, params, qspec); got "
+                            f"{3 + len(legacy)} positional args")
+        params, qspec = _legacy_params(params, qspec, alpha), legacy[0]
+    elif not isinstance(params, dict):
+        raise TypeError(
+            "qgemm now takes the qlinear param dict as its second "
+            "argument (see the migration table in kernels/ops.py)")
+    blk = _as_block(block, interpret)
+    kw = blk.kernel_kwargs()
+
     if qspec.weight_only:
         if qspec.w_bits != 4:
             raise NotImplementedError("weight-only kernel is W4A16")
-        return w4a16_gemm(
-            x, qvalue, scale, group_size=qspec.group_size,
-            interpret=interpret, **blk,
-        )
+        return w4a16_gemm(x, params["qvalue"], params["scale"],
+                          group_size=qspec.group_size, **kw)
 
-    xq, sa = act_quant(x, bits=qspec.a_bits, interpret=interpret)
+    xq, sa = act_quant(x, bits=qspec.a_bits, interpret=blk.interpret)
     if qspec.scale_mode == "integer" and qspec.fine_grained:
-        if alpha is None:
-            alpha = _default_alpha(qspec)
-        if not isinstance(alpha, (int, float)):
+        a = _resolve_alpha(params.get("alpha"), qspec)
+        if not isinstance(a, (int, float)):
             # traced per-layer amplifier: fold 1/alpha into sa (exact for
             # the power-of-two alphas the heuristic emits)
-            sa = sa / jnp.asarray(alpha, jnp.float32)
-            alpha = 1.0
+            sa = sa / jnp.asarray(a, jnp.float32)
+            a = 1.0
         return fg_gemm_integer_scale(
-            xq, sa, qvalue, scale,
-            group_size=qspec.group_size, alpha=float(alpha),
-            w_bits=qspec.w_bits, interpret=interpret, **blk,
-        )
+            xq, sa, params["qvalue"], params["scale"],
+            group_size=qspec.group_size, alpha=float(a),
+            w_bits=qspec.w_bits, **kw)
     return fg_gemm_float_scale(
-        xq, sa, qvalue, scale,
-        group_size=qspec.group_size, w_bits=qspec.w_bits,
-        interpret=interpret, **blk,
-    )
-
-
-def qgemm_from_params(x, params: dict, qspec: QuantSpec, *, interpret=False,
-                      block=None):
-    """Convenience: dispatch straight from a qlinear param dict.
-
-    Passes the stored per-layer ``alpha`` through as a (possibly traced)
-    array — NOT ``float()``-coerced, so this works under jit and heuristic
-    amplifiers rescale by the layer's actual alpha.
-    """
-    return qgemm(x, params["qvalue"], params["scale"], qspec,
-                 alpha=params.get("alpha"), interpret=interpret, block=block)
-
-
-# ---------------------------------------------------------------------------
-# Grouped (batched-expert) dispatch — the MoE fast path
-# ---------------------------------------------------------------------------
+        xq, sa, params["qvalue"], params["scale"],
+        group_size=qspec.group_size, w_bits=qspec.w_bits, **kw)
 
 
 def qgemm_grouped(
     x: jax.Array,         # (E, C, K) bf16/f32 dispatch buffer
-    qvalue: jax.Array,    # (E, K/2, N) packed | (E, K, N) int8
-    scale: jax.Array,     # (E, G, N) int32 or f32 per scheme
-    qspec: QuantSpec,
-    *,
-    alpha=None,           # float | f32 (E,) per-expert amplifiers | None
+    params: dict,         # stacked per-expert param dict
+    qspec: QuantSpec = None,
+    *legacy,
+    alpha=None,
     row_counts=None,      # int32 (E,) routed rows per expert | None=all C
-    interpret: bool = False,
-    block: dict | None = None,
+    interpret: bool | None = None,
+    block: BlockConfig | dict | None = None,
 ) -> jax.Array:
     """Batched-expert quantized GEMM; returns f32 (E, C, N).
 
@@ -109,38 +219,68 @@ def qgemm_grouped(
     (``kernels.moe_gemm``): activation quantization happens INSIDE the
     grouped kernel's first k-group pass (no dense ``act_quant`` sweep over
     the ``(E*C, K)`` buffer), and when ``row_counts`` is given, m-tiles
-    entirely past an expert's routed row count are skipped. Rows at or past
+    entirely past an expert's routed row count are skipped. ``row_counts``
+    is a data operand (traced under jit — the serving engine feeds the
+    live per-tick dispatch counts without retracing). Rows at or past
     ``row_counts[e]`` must be zero-filled (the MoE dispatch guarantees
     this); ``row_counts=None`` treats every capacity slot as routed.
     """
-    blk = block or {}
+    if legacy:  # v1 positional form
+        warnings.warn(
+            "qgemm_grouped(x, qvalue, scale, qspec) is deprecated; pass "
+            "the stacked param dict instead", DeprecationWarning,
+            stacklevel=2)
+        if len(legacy) != 1:
+            raise TypeError(f"qgemm_grouped takes (x, params, qspec); got "
+                            f"{3 + len(legacy)} positional args")
+        params, qspec = _legacy_params(params, qspec, alpha), legacy[0]
+    elif not isinstance(params, dict):
+        raise TypeError(
+            "qgemm_grouped now takes the stacked qlinear param dict as "
+            "its second argument (see the migration table in "
+            "kernels/ops.py)")
+    blk = _as_block(block, interpret)
+    kw = blk.kernel_kwargs()
+
     if qspec.weight_only:
         if qspec.w_bits != 4:
             raise NotImplementedError("weight-only kernel is W4A16")
         return grouped_w4a16_gemm_ragged(
-            x, row_counts, qvalue, scale, group_size=qspec.group_size,
-            interpret=interpret, **blk,
-        )
+            x, row_counts, params["qvalue"], params["scale"],
+            group_size=qspec.group_size, **kw)
 
     if qspec.scale_mode == "integer" and qspec.fine_grained:
-        if alpha is None:
-            alpha = _default_alpha(qspec)
+        a = _resolve_alpha(params.get("alpha"), qspec)
         return fg_grouped_gemm_integer_scale_ragged(
-            x, row_counts, qvalue, scale,
-            group_size=qspec.group_size, alpha=alpha,
-            a_bits=qspec.a_bits, w_bits=qspec.w_bits,
-            interpret=interpret, **blk,
-        )
+            x, row_counts, params["qvalue"], params["scale"],
+            group_size=qspec.group_size, alpha=a,
+            a_bits=qspec.a_bits, w_bits=qspec.w_bits, **kw)
     return fg_grouped_gemm_float_scale_ragged(
-        x, row_counts, qvalue, scale,
+        x, row_counts, params["qvalue"], params["scale"],
         group_size=qspec.group_size, a_bits=qspec.a_bits,
-        w_bits=qspec.w_bits, interpret=interpret, **blk,
-    )
+        w_bits=qspec.w_bits, **kw)
+
+
+# ---------------------------------------------------------------------------
+# v1 deprecation shims (one release; see module docstring migration table)
+# ---------------------------------------------------------------------------
+
+
+def qgemm_from_params(x, params: dict, qspec: QuantSpec, *, interpret=False,
+                      block=None):
+    """Deprecated alias of :func:`qgemm` (the param-dict form is now the
+    primary signature)."""
+    warnings.warn("qgemm_from_params is deprecated; call qgemm(x, params, "
+                  "qspec, block=...) directly", DeprecationWarning,
+                  stacklevel=2)
+    return qgemm(x, params, qspec, interpret=interpret, block=block)
 
 
 def qgemm_grouped_from_params(x, params: dict, qspec: QuantSpec, *,
                               row_counts=None, interpret=False, block=None):
-    """Dispatch from a stacked (per-expert) qlinear param dict."""
-    return qgemm_grouped(x, params["qvalue"], params["scale"], qspec,
-                         alpha=params.get("alpha"), row_counts=row_counts,
+    """Deprecated alias of :func:`qgemm_grouped`."""
+    warnings.warn("qgemm_grouped_from_params is deprecated; call "
+                  "qgemm_grouped(x, params, qspec, row_counts=..., "
+                  "block=...) directly", DeprecationWarning, stacklevel=2)
+    return qgemm_grouped(x, params, qspec, row_counts=row_counts,
                          interpret=interpret, block=block)

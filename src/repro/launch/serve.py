@@ -32,6 +32,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline)")
+    ap.add_argument("--kernel-mode", default="reference",
+                    choices=["reference", "pallas", "pallas_interpret"],
+                    help="qlinear backend inside prefill/decode")
     args = ap.parse_args()
 
     from benchmarks.common import calib_batches, load_bench_model
@@ -54,7 +57,8 @@ def main() -> None:
 
     sc = ServeConfig(max_slots=args.slots, max_seq=128, prefill_len=32,
                      max_new_tokens=args.max_new,
-                     temperature=args.temperature)
+                     temperature=args.temperature,
+                     kernel_mode=args.kernel_mode)
     eng = Engine(api, cfg, qparams, sc, recipe=recipe)
     pipe = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size,
                                         seq_len=32, batch_size=1))

@@ -41,7 +41,8 @@ def end_capture() -> dict:
 
 
 def apply_linear(recipe: QuantRecipe | None, path: str,
-                 params: dict, x: jax.Array) -> jax.Array:
+                 params: dict, x: jax.Array, *,
+                 mode: str | None = None) -> jax.Array:
     qspec = recipe.spec_for(path) if recipe is not None else None
     if _CAPTURE is not None and not isinstance(
             x, jax.core.Tracer):
@@ -52,7 +53,9 @@ def apply_linear(recipe: QuantRecipe | None, path: str,
         _CAPTURE.setdefault(path, []).append(x2[::step][:_CAPTURE_SAMPLES])
     # params may be stacked (scan): qlinear handles only per-layer; scan
     # bodies receive the already-sliced layer params, so shapes are 2D here.
-    return qlinear.linear_apply(params, x, qspec)
+    # ``mode`` is cfg.kernel_mode threaded from the model block; None defers
+    # to the ambient default inside qlinear.
+    return qlinear.linear_apply(params, x, qspec, mode=mode)
 
 
 # ---------------------------------------------------------------------------

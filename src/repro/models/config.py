@@ -86,6 +86,11 @@ class ModelConfig:
     kv_cache_dtype: str = "bfloat16"   # or "int8" (quantized KV, beyond-paper)
     scan_layers: bool = True
     remat: bool = True
+    # Which qlinear backend quantized layers run: "reference" (pure jnp),
+    # "pallas", "pallas_interpret"; None inherits the ambient default
+    # (qlinear.current_kernel_mode()). The serving engine sets this from
+    # ServeConfig.kernel_mode so its jitted decode drives the kernels.
+    kernel_mode: str | None = None
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -41,7 +41,8 @@ def expert_linear_specs(E: int, K: int, N: int, qspec, axes, dtype) -> dict:
 
 
 def expert_linear_apply(params: dict, x: jax.Array, qspec,
-                        row_counts: jax.Array | None = None) -> jax.Array:
+                        row_counts: jax.Array | None = None, *,
+                        mode: str | None = None) -> jax.Array:
     """x: (E, C, K) -> (E, C, N), all experts in one call.
 
     Quantized experts route through ``qlinear.grouped_linear_apply``: under
@@ -49,10 +50,13 @@ def expert_linear_apply(params: dict, x: jax.Array, qspec,
     Pallas GEMM over the (experts, m, n, k-groups) grid (kernels/moe_gemm)
     rather than a vmap of the per-expert reference GEMM. ``row_counts``
     (int32 (E,), routed rows per expert; rows past it are zero-filled by
-    the dispatch) lets the ragged kernel skip capacity-padding m-tiles.
+    the dispatch) lets the ragged kernel skip capacity-padding m-tiles —
+    it is a data operand (traced under jit), so the serving engine's
+    decode step feeds fresh per-tick counts without retracing. ``mode`` is
+    cfg.kernel_mode threaded from moe_apply.
     """
     return qlinear.grouped_linear_apply(params, x, qspec,
-                                        row_counts=row_counts)
+                                        row_counts=row_counts, mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +102,39 @@ def _int8_transport_bwd(_, g):
 
 
 _int8_transport.defvjp(_int8_transport_fwd, _int8_transport_bwd)
+
+
+# -- routing trace ----------------------------------------------------------
+# Observability hook for the serving benchmark: while a trace is active,
+# moe_apply emits a jax.debug.callback recording the per-expert routed
+# (capacity-clipped) counts of every MoE layer invocation, so per-tick
+# executed-m-tile accounting can be derived from the LIVE engine dispatch.
+# The callback is staged at trace time — start the trace BEFORE the first
+# (re)compile of the function you want observed; when no trace is active at
+# trace time, compiled code carries no callback at all (zero overhead).
+
+_ROUTING_TRACE: list | None = None
+
+
+def start_routing_trace() -> list:
+    """Begin recording {"counts": np (G,E), "capacity": int} per MoE call."""
+    global _ROUTING_TRACE
+    _ROUTING_TRACE = []
+    return _ROUTING_TRACE
+
+
+def stop_routing_trace() -> list:
+    global _ROUTING_TRACE
+    out, _ROUTING_TRACE = _ROUTING_TRACE, None
+    return out if out is not None else []
+
+
+def _record_routing(counts, *, capacity: int) -> None:
+    if _ROUTING_TRACE is not None:
+        import numpy as np
+
+        _ROUTING_TRACE.append({"counts": np.asarray(counts),
+                               "capacity": capacity})
 
 
 def moe_specs(cfg: ModelConfig, recipe, base: str) -> dict:
@@ -196,15 +233,26 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, recipe,
     # single per-expert count — fall back to the dense (exact) behavior.
     row_counts = counts[0] if G == 1 else None
 
+    if _ROUTING_TRACE is not None:
+        import functools
+
+        jax.debug.callback(
+            functools.partial(_record_routing, capacity=C), counts)
+
+    km = cfg.kernel_mode
+
     def expert_ffn(b):  # b: (G, E, C, d) -> (G, E, C, d)
         be = jnp.swapaxes(b, 0, 1).reshape(E, G * C, d)
         qs_g = recipe.spec_for(f"{base}/gate") if recipe else None
         qs_u = recipe.spec_for(f"{base}/up") if recipe else None
         qs_d = recipe.spec_for(f"{base}/down") if recipe else None
-        g = expert_linear_apply(params["gate"], be, qs_g, row_counts)
-        u = expert_linear_apply(params["up"], be, qs_u, row_counts)
+        g = expert_linear_apply(params["gate"], be, qs_g, row_counts,
+                                mode=km)
+        u = expert_linear_apply(params["up"], be, qs_u, row_counts,
+                                mode=km)
         h = (jax.nn.silu(g.astype(jnp.float32)).astype(be.dtype) * u)
-        y = expert_linear_apply(params["down"], h, qs_d, row_counts)
+        y = expert_linear_apply(params["down"], h, qs_d, row_counts,
+                                mode=km)
         return jnp.swapaxes(y.reshape(E, G, C, d), 0, 1)
 
     yb = expert_ffn(buf)  # (G, E, C, d)

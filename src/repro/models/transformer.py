@@ -178,7 +178,33 @@ def apply(
     pos=0,
     memory: jax.Array | None = None,  # (B, Sm, d) image/frame embeddings
 ):
-    """Returns (logits f32 (B, S, V), new_cache, aux_loss)."""
+    """Returns (logits f32 (B, S, V), new_cache, aux_loss).
+
+    ``cfg.kernel_mode`` (when set) selects the qlinear backend for every
+    quantized linear in the forward. It is established here, inside the
+    (possibly jitted) function body, so retraces re-apply it.
+    """
+    if cfg.kernel_mode:
+        from repro.core import qlinear
+
+        with qlinear.kernel_mode(cfg.kernel_mode):
+            return _apply(params, cfg, tokens, recipe=recipe, mode=mode,
+                          cache=cache, pos=pos, memory=memory)
+    return _apply(params, cfg, tokens, recipe=recipe, mode=mode,
+                  cache=cache, pos=pos, memory=memory)
+
+
+def _apply(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    recipe=None,
+    mode: str = "train",
+    cache: dict | None = None,
+    pos=0,
+    memory: jax.Array | None = None,
+):
     prefix, pattern, R = split_layers(layer_kinds(cfg))
     x = params["embed"].astype(cfg.activation_dtype)[tokens]
     aux = jnp.zeros((), jnp.float32)

@@ -36,6 +36,12 @@ class ServeConfig:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    # qlinear backend for quantized layers inside prefill/decode:
+    # "reference" | "pallas" | "pallas_interpret" | None (= keep the model
+    # config's own kernel_mode). Carried onto ModelConfig.kernel_mode so
+    # the jitted fns bake the chosen backend in — e.g. every expert FFN in
+    # a quantized-MoE decode runs the ragged grouped kernel.
+    kernel_mode: str | None = None
 
 
 @dataclasses.dataclass
@@ -50,10 +56,18 @@ class Engine:
     def __init__(self, api: ModelApi, cfg: ModelConfig, params: Any,
                  serve_cfg: ServeConfig, recipe=None):
         self.api = api
+        if serve_cfg.kernel_mode is not None:
+            cfg = dataclasses.replace(cfg,
+                                      kernel_mode=serve_cfg.kernel_mode)
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
         self.recipe = recipe
+        # trace counters: jit retraces bump these (the per-tick row_counts
+        # of a quantized-MoE decode are traced operands, so steady-state
+        # serving must keep decode_traces at 1 — asserted in tests).
+        self.prefill_traces = 0
+        self.decode_traces = 0
         B = serve_cfg.max_slots
         cspecs = api.cache_specs(cfg, B, serve_cfg.max_seq)
         self.cache = jax.tree.map(
@@ -71,8 +85,9 @@ class Engine:
         # padded end) while still populating the KV cache. mode="prefill"
         # keeps its last-token-only slicing for the serving dry-run.
         def prefill_fn(params, tokens, cache1):
-            logits, cache1, _ = api.apply(
-                params, cfg, tokens, recipe=recipe, mode="train",
+            self.prefill_traces += 1
+            logits, cache1, _ = self.api.apply(
+                params, self.cfg, tokens, recipe=recipe, mode="train",
                 cache=cache1, pos=0)
             return logits, cache1
 
@@ -80,8 +95,9 @@ class Engine:
 
         # jit'd batched decode with per-slot positions
         def decode_fn(params, tokens, cache, pos_vec):
-            logits, cache, _ = api.apply(
-                params, cfg, tokens, recipe=recipe, mode="decode",
+            self.decode_traces += 1
+            logits, cache, _ = self.api.apply(
+                params, self.cfg, tokens, recipe=recipe, mode="decode",
                 cache=cache, pos=pos_vec)
             return logits[:, 0], cache
 

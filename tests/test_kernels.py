@@ -150,7 +150,7 @@ def test_qgemm_dispatch_matches_reference_path():
     """kernels.ops.qgemm (pallas interpret) == qlinear reference path."""
     from repro.core.qlinear import linear_apply, quantize_linear
     from repro.core.recipe import QuantSpec
-    from repro.kernels.ops import qgemm_from_params
+    from repro.kernels.ops import BlockConfig, qgemm
 
     K, N, M = 512, 256, 24
     spec = QuantSpec()
@@ -159,7 +159,7 @@ def test_qgemm_dispatch_matches_reference_path():
     params = quantize_linear(w, spec)
     y_ref = linear_apply(params, x.astype(jnp.float32), spec,
                          mode="reference")
-    y_pal = qgemm_from_params(x.astype(jnp.float32), params, spec,
-                              interpret=True)
+    y_pal = qgemm(x.astype(jnp.float32), params, spec,
+                  block=BlockConfig(interpret=True))
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
                                rtol=2e-3, atol=2e-2)

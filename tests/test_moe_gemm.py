@@ -211,12 +211,8 @@ def test_expert_linear_apply_routes_to_grouped_kernel():
     spec = QuantSpec()
     x = jax.random.normal(jax.random.PRNGKey(20), (E, C, K)).astype(
         jnp.bfloat16)
-    prev_mode = qlinear.default_kernel_mode()
-    qlinear.set_default_kernel_mode("pallas_interpret")
-    try:
+    with qlinear.kernel_mode("pallas_interpret"):
         y_pal = expert_linear_apply(params, x, spec)
-    finally:
-        qlinear.set_default_kernel_mode(prev_mode)
     y_ref = expert_linear_apply(params, x, spec)
     np.testing.assert_allclose(
         np.asarray(y_pal, dtype=np.float32), np.asarray(y_ref, np.float32),

@@ -1,0 +1,146 @@
+"""kernels.ops v2 call convention: BlockConfig, shims, alpha resolution."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qlinear
+from repro.core.recipe import QuantSpec
+from repro.kernels import ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _dense_case(seed=0, K=512, N=256, M=8):
+    spec = QuantSpec()
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N)) * 0.03
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K)).astype(
+        jnp.float32)
+    return spec, qlinear.quantize_linear(w, spec), x
+
+
+class TestBlockConfig:
+    def test_defaults_match_kernel_defaults(self):
+        b = ops.BlockConfig()
+        assert (b.bm, b.bn, b.bk, b.interpret) == (128, 256, 512, False)
+
+    @pytest.mark.parametrize("kw", [dict(bm=7), dict(bm=0), dict(bn=100),
+                                    dict(bk=-128), dict(bn=64)])
+    def test_divisibility_validated_at_construction(self, kw):
+        with pytest.raises(ValueError):
+            ops.BlockConfig(**kw)
+
+    def test_frozen(self):
+        with pytest.raises(Exception):
+            ops.BlockConfig().bm = 64
+
+    def test_legacy_dict_coerces_with_warning(self):
+        with pytest.warns(DeprecationWarning):
+            blk = ops._as_block({"bm": 64, "bn": 128, "bk": 256}, True)
+        assert blk == ops.BlockConfig(bm=64, bn=128, bk=256, interpret=True)
+
+    def test_rejects_non_block(self):
+        with pytest.raises(TypeError):
+            ops._as_block("128x256", None)
+
+
+class TestUnifiedQgemm:
+    def test_param_dict_is_primary_signature(self):
+        spec, params, x = _dense_case()
+        y = ops.qgemm(x, params, spec, block=ops.INTERPRET)
+        y_ref = qlinear.linear_apply(params, x, spec, mode="reference")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-3, atol=2e-2)
+
+    def test_legacy_positional_form_warns_and_matches(self):
+        spec, params, x = _dense_case()
+        y_new = ops.qgemm(x, params, spec, block=ops.INTERPRET)
+        with pytest.warns(DeprecationWarning):
+            y_old = ops.qgemm(x, params["qvalue"], params["scale"], spec,
+                              alpha=params["alpha"], interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+    def test_from_params_shim_warns_and_matches(self):
+        spec, params, x = _dense_case()
+        y_new = ops.qgemm(x, params, spec, block=ops.INTERPRET)
+        with pytest.warns(DeprecationWarning):
+            y_old = ops.qgemm_from_params(x, params, spec, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+    def test_non_dict_params_raises(self):
+        spec, params, x = _dense_case()
+        with pytest.raises(TypeError):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                ops.qgemm(x, params["qvalue"], spec)
+
+
+class TestUnifiedQgemmGrouped:
+    def _grouped_case(self, E=2, C=16, K=256, N=256):
+        spec = QuantSpec()
+        qps = [qlinear.quantize_linear(
+            jax.random.normal(jax.random.PRNGKey(10 + e), (K, N)) * 0.03,
+            spec) for e in range(E)]
+        params = {k: jnp.stack([p[k] for p in qps]) for k in qps[0]}
+        x = jax.random.normal(jax.random.PRNGKey(20), (E, C, K)).astype(
+            jnp.float32)
+        return spec, params, x
+
+    def test_matches_grouped_linear_apply(self):
+        spec, params, x = self._grouped_case()
+        y = ops.qgemm_grouped(x, params, spec, block=ops.INTERPRET)
+        y_ref = qlinear.grouped_linear_apply(x=x, params=params, qspec=spec,
+                                             mode="pallas_interpret")
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32), np.asarray(y_ref, np.float32))
+
+    def test_grouped_from_params_shim(self):
+        spec, params, x = self._grouped_case()
+        rc = jnp.asarray([7, 16], jnp.int32)
+        y_new = ops.qgemm_grouped(x, params, spec, row_counts=rc,
+                                  block=ops.INTERPRET)
+        with pytest.warns(DeprecationWarning):
+            y_old = ops.qgemm_grouped_from_params(
+                x, params, spec, row_counts=rc, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+
+
+class TestAlphaResolution:
+    def test_static_int_amplifier_is_exact_fallback(self):
+        assert ops._resolve_alpha(None, QuantSpec(amplifier=2048)) == 2048.0
+
+    def test_stored_alpha_wins(self):
+        assert ops._resolve_alpha(512.0, QuantSpec(amplifier=2048)) == 512.0
+
+    @pytest.mark.parametrize("amp", ["heuristic", "heuristic+6"])
+    def test_heuristic_amplifier_without_stored_alpha_raises(self, amp):
+        with pytest.raises(ValueError, match="per layer"):
+            ops._resolve_alpha(None, QuantSpec(amplifier=amp))
+
+
+class TestKernelModeContext:
+    def test_nesting_and_default(self):
+        assert qlinear.current_kernel_mode() == "reference"
+        with qlinear.kernel_mode("pallas_interpret"):
+            assert qlinear.current_kernel_mode() == "pallas_interpret"
+            with qlinear.kernel_mode("pallas"):
+                assert qlinear.current_kernel_mode() == "pallas"
+            assert qlinear.current_kernel_mode() == "pallas_interpret"
+        assert qlinear.current_kernel_mode() == "reference"
+
+    def test_invalid_mode_rejected(self):
+        with pytest.raises(ValueError):
+            with qlinear.kernel_mode("cuda"):
+                pass
+
+    def test_legacy_setter_warns_and_maps_onto_stack(self):
+        with pytest.warns(DeprecationWarning):
+            qlinear.set_default_kernel_mode("pallas_interpret")
+        try:
+            assert qlinear.current_kernel_mode() == "pallas_interpret"
+        finally:
+            with pytest.warns(DeprecationWarning):
+                qlinear.set_default_kernel_mode("reference")
+        assert qlinear.current_kernel_mode() == "reference"
