@@ -26,6 +26,39 @@ CKPT_DIR = os.environ.get("BENCH_CKPT", "results/bench_lm_ckpt")
 _STATE: dict = {}
 
 
+def provenance() -> dict:
+    """Host/build provenance stamped onto benchmark JSON documents so
+    BENCH_*.json trajectories are comparable across commits and machines:
+    git SHA, UTC timestamp, jax/jaxlib versions, platform, backend."""
+    import datetime
+    import platform
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    try:
+        import jaxlib
+
+        jaxlib_ver = jaxlib.__version__
+    except Exception:
+        jaxlib_ver = None
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_ver,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "backend": jax.default_backend(),
+    }
+
+
 def load_bench_model():
     """(api, cfg, fp_params) — trained if a checkpoint exists, else a
     deterministic random init (benchmarks still run, clearly labeled)."""

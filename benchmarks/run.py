@@ -65,13 +65,24 @@ def main(argv=None) -> None:
     print(f"# total {time.time()-t0:.1f}s, {len(report.rows)} rows",
           file=sys.stderr)
     if args.json:
+        from repro import obs
+
+        from .common import provenance
+
+        prov = provenance()
         doc = {
             "modules": mods,
             "fast": args.fast,
             "elapsed_s": round(time.time() - t0, 1),
+            "provenance": prov,
             "failures": [{"module": m, "error": e} for m, e in failures],
-            "rows": [{"name": n, "us_per_call": u, "derived": d}
+            "rows": [{"name": n, "us_per_call": u, "derived": d,
+                      "provenance": prov}
                      for n, u, d in report.rows],
+            # registry snapshot: qgemm call counts, ragged m-tiles, engine
+            # tick/latency series, quantization health — everything the
+            # benchmarked code ticked while running
+            "metrics": obs.default_registry().snapshot(),
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)

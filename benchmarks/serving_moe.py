@@ -154,12 +154,20 @@ def main(argv=None) -> None:
                     help="write rows as JSON (path, or stdout if bare)")
     args = ap.parse_args(argv)
 
+    from repro import obs
+
+    from .common import provenance
+
     report = Report()
     run(report, fast=args.fast)
     if args.json:
+        prov = provenance()
         doc = {"modules": ["serving_moe"], "fast": args.fast,
-               "rows": [{"name": n, "us_per_call": u, "derived": d}
-                        for n, u, d in report.rows]}
+               "provenance": prov,
+               "rows": [{"name": n, "us_per_call": u, "derived": d,
+                         "provenance": prov}
+                        for n, u, d in report.rows],
+               "metrics": obs.default_registry().snapshot()}
         if args.json == "-":
             print(json.dumps(doc, indent=1))
         else:

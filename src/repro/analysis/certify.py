@@ -38,6 +38,8 @@ import math
 
 import numpy as np
 
+from repro import obs
+
 from .intervals import Interval
 
 INT32_LIMIT = float(2**31)
@@ -87,7 +89,13 @@ def context(label: str):
 
 
 def record(cert: Certificate) -> Certificate:
+    """Single chokepoint every certificate passes through — also the place
+    the ``qcert_verdicts_total{verdict}`` telemetry counter ticks."""
     _LOG.append(cert)
+    obs.current_registry().counter(
+        "qcert_verdicts_total",
+        "INT32-overflow certificates by verdict", ("verdict",),
+    ).inc(verdict=cert.verdict)
     return cert
 
 

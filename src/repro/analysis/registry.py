@@ -250,6 +250,49 @@ def _build_moe_ragged_decode(integer: bool):
     return build
 
 
+def _qspec_is():
+    from repro.core.recipe import QuantSpec
+
+    return QuantSpec(w_bits=4, a_bits=8, group_size=GS,
+                     scale_mode="integer", amplifier=1024)
+
+
+def _build_ops_dense():
+    """The instrumented ``kernels.ops.qgemm`` wrapper end-to-end (telemetry
+    is host-side python, so the traced jaxpr must stay identical to the
+    bare act-quant + integer-scale kernel composition)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(8)
+    wq, _, ints = _w4_operands(rng)
+    params = {"qvalue": _j(wq), "scale": _j(ints), "alpha": 1024.0}
+    spec = _qspec_is()
+
+    def fn(x):
+        return ops.qgemm(x, params, spec, block=ops.BlockConfig(bk=BK))
+
+    return fn, (_j(np.zeros((M, K), np.float32)),), {0: DATA}
+
+
+def _build_ops_grouped():
+    """The instrumented ``kernels.ops.qgemm_grouped`` wrapper over the
+    ragged fused-quant path (row_counts traced, as the engine feeds it)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(9)
+    packed, ints = _moe_w4(rng)
+    params = {"qvalue": _j(packed), "scale": _j(ints), "alpha": 1024.0}
+    spec = _qspec_is()
+
+    def fn(x, rc):
+        return ops.qgemm_grouped(x, params, spec, row_counts=rc,
+                                 block=ops.BlockConfig(bk=BK))
+
+    args = (_j(np.zeros((E, C, K), np.float32)),
+            _j(np.asarray([23, C], np.int32)))
+    return fn, args, {0: DATA, 1: Interval(0, C)}
+
+
 def _build_w4a16_ragged():
     from repro.kernels import moe_gemm as MG
 
@@ -313,4 +356,12 @@ def entries() -> list:
                     f"engine decode E={E_DEC} C={C_DEC} K={K} float-scale",
                     _build_moe_ragged_decode(False),
                     prefetch_ranges=_RC_DEC),
+        # instrumented dispatch wrappers (telemetry must not perturb jaxprs)
+        KernelEntry("ops-qgemm-is",
+                    f"ops.qgemm W4A8-IS g{GS} K={K} alpha=1024",
+                    _build_ops_dense, integer_scale=True, alpha=1024),
+        KernelEntry("ops-qgemm-grouped-is",
+                    f"ops.qgemm_grouped ragged E={E} C={C} K={K} alpha=1024",
+                    _build_ops_grouped, integer_scale=True, alpha=1024,
+                    prefetch_ranges=_RC),
     ]

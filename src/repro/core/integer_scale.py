@@ -17,6 +17,9 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
 
 from .quant import QWeight, qmax
 
@@ -127,7 +130,24 @@ def integerize(
     int_scale = jnp.clip(
         jnp.round(qw.scale.astype(jnp.float32) * alpha), 1, 2**31 - 1
     ).astype(jnp.int32)
+    _record_floor_hits(qw.scale, alpha)
     return ISWeight(qw.qvalue, int_scale, alpha, qw.bits, qw.group_size)
+
+
+def _record_floor_hits(scales, alpha: int) -> None:
+    """Count group scales so small that round(scale*alpha) clipped up to 1
+    (each is a group whose effective scale integerization degraded to the
+    1/alpha floor — a sign the amplifier is too small for this layer).
+    Host-guarded: skipped when the scales are traced."""
+    try:
+        s = np.asarray(scales)
+    except Exception:  # TracerArrayConversionError and friends
+        return
+    floor = obs.current_registry().counter(
+        "int_scale_floor_hits_total",
+        "group scales clipped up to int_scale=1 during integerization")
+    hits = int((np.round(s.astype(np.float64) * alpha) < 1).sum())
+    floor.inc(hits)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import common as MC
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi
@@ -142,10 +143,19 @@ def post_training_quantize(api: ModelApi, cfg: ModelConfig, fp_params: Any,
         return fp_node
 
     n_before = len(certify.log())
-    out = walk(fp_params, qspec_tree, "")
-    certs = certify.log()[n_before:]
-    if certs:
-        s = certify.summary(certs)
+    reg = obs.current_registry()
+    s = None
+    with obs.span(reg, "ptq_run_seconds", event="ptq_run") as sp:
+        out = walk(fp_params, qspec_tree, "")
+        certs = certify.log()[n_before:]
+        sp.fields["certificates"] = len(certs)
+        if certs:
+            s = certify.summary(certs)
+            sp.fields.update(certified=s["certified"],
+                             capped_alpha=s["capped-alpha"],
+                             fallback=s["fallback"])
+    reg.counter("ptq_runs_total", "post_training_quantize invocations").inc()
+    if s is not None:
         print(f"[ptq] overflow certificates: {s['certified']} certified / "
               f"{s['capped-alpha']} capped-alpha / {s['fallback']} fallback"
               f" (worst accumulator {s['worst_frac']:.3f} of 2^31)")

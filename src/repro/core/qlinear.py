@@ -14,12 +14,12 @@ for dry-run lowering and CPU tests) and the Pallas TPU kernels in
 from __future__ import annotations
 
 import contextlib
-import warnings
 from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.nn import spec as S
 from . import packing
 from .integer_scale import integerize
@@ -30,8 +30,8 @@ KernelMode = Literal["reference", "pallas", "pallas_interpret"]
 
 # The mode is threaded explicitly: ModelConfig.kernel_mode -> apply_linear /
 # expert_linear_apply -> here, and the serving engine sets it on its
-# ServeConfig. ``kernel_mode`` below is a scoped shim for scripts that used
-# the old process-wide ``set_default_kernel_mode`` setter.
+# ServeConfig. ``kernel_mode`` below is the scoped default for scripts and
+# benchmarks that don't thread a ``mode=`` kwarg.
 _MODE_STACK: list[KernelMode] = []
 
 
@@ -55,25 +55,6 @@ def kernel_mode(mode: KernelMode):
 def current_kernel_mode() -> KernelMode:
     """Mode used when a call site passes ``mode=None``."""
     return _MODE_STACK[-1] if _MODE_STACK else "reference"
-
-
-def set_default_kernel_mode(mode: KernelMode) -> None:
-    """Deprecated: use ``with qlinear.kernel_mode(mode):`` or pass ``mode=``
-    explicitly. Kept one release as an unscoped push (no restore)."""
-    warnings.warn(
-        "set_default_kernel_mode is deprecated; use the kernel_mode() "
-        "context manager or pass mode= explicitly", DeprecationWarning,
-        stacklevel=2)
-    _MODE_STACK.clear()
-    if mode != "reference":
-        _MODE_STACK.append(mode)
-
-
-def default_kernel_mode() -> KernelMode:
-    """Deprecated alias of :func:`current_kernel_mode`."""
-    warnings.warn("default_kernel_mode is deprecated; use "
-                  "current_kernel_mode", DeprecationWarning, stacklevel=2)
-    return current_kernel_mode()
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +145,20 @@ def finish_quant(
     rot: jax.Array | None = None,
 ) -> dict[str, jax.Array]:
     """Shared finishing step for every algorithm: pack int4, integerize the
-    scales (the paper's free lunch), assemble the param dict."""
+    scales (the paper's free lunch), assemble the param dict.
+
+    Quantization-health telemetry lands here: one ``quantized_layers_total``
+    tick per finished layer, and ``alpha_cap_events_total`` whenever the
+    overflow certificate forces the amplifier below the requested value.
+    ``alpha_cap_events_total`` is created unconditionally so an explicit
+    zero appears in snapshots even on runs that never cap.
+    """
+    reg = obs.current_registry()
+    caps = reg.counter(
+        "alpha_cap_events_total",
+        "layers whose amplifier was capped below request by the "
+        "INT32-overflow certificate")
+    caps.inc(0)  # materialize the series: snapshots show an explicit 0
     qvalue = packing.pack_int4(codes) if qspec.w_bits == 4 else codes
     out: dict[str, jax.Array] = {"qvalue": qvalue}
     if (qspec.scale_mode == "integer" and not qspec.weight_only
@@ -176,11 +170,18 @@ def finish_quant(
         cert = _certify_amplifier(scales, isw.alpha, qspec)
         if cert is not None and cert.resolved_alpha != isw.alpha:
             # statically unsafe amplifier: rebuild at the certified cap
+            caps.inc()
             isw = integerize(qw, cert.resolved_alpha)
+        scheme = f"w{qspec.w_bits}a{qspec.a_bits}-is"
         out["scale"] = isw.int_scale
         out["alpha"] = jnp.float32(isw.alpha)
     else:
+        scheme = (f"w{qspec.w_bits}a16" if qspec.weight_only
+                  else f"w{qspec.w_bits}a{qspec.a_bits}-fs")
         out["scale"] = scales
+    reg.counter("quantized_layers_total",
+                "linear layers finished by finish_quant",
+                ("scheme",)).inc(scheme=scheme)
     if bias is not None:
         out["b"] = bias
     if pre_scale is not None:

@@ -23,6 +23,9 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
 
 ScaleMode = Literal["float", "integer"]
 
@@ -40,9 +43,27 @@ def qmin(bits: int, sym: bool = True) -> int:
 # ---------------------------------------------------------------------------
 
 
-def symmetric_scale(x: jax.Array, axis, bits: int, keepdims=True, eps=1e-8):
+def symmetric_scale(x: jax.Array, axis, bits: int, keepdims=True, eps=1e-8,
+                    where: str | None = None):
+    """``where`` labels amax-floor telemetry (e.g. "weight"/"activation");
+    when set and the input is host-concrete, rows whose absmax fell below
+    ``eps`` are counted in ``amax_floor_hits_total{where}`` (an all-zero
+    channel/token quantizes to garbage scale 1/qmax — worth surfacing)."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    if where is not None:
+        _record_amax_floor(amax, eps, where)
     return jnp.maximum(amax, eps) / qmax(bits)
+
+
+def _record_amax_floor(amax, eps: float, where: str) -> None:
+    try:
+        a = np.asarray(amax)
+    except Exception:  # traced (jit/vmap): skip, per the repro.obs rule
+        return
+    obs.current_registry().counter(
+        "amax_floor_hits_total",
+        "quantization scales hitting the eps amax floor", ("where",),
+    ).inc(int((a < eps).sum()), where=where)
 
 
 def asymmetric_scale_zp(x: jax.Array, axis, bits: int, keepdims=True, eps=1e-8):
@@ -113,13 +134,15 @@ def quantize_weight(
     K, N = w.shape
     w = w.astype(jnp.float32)
     if group_size <= 0:
-        scale = symmetric_scale(w * clip_ratio, axis=0, bits=bits, keepdims=False)
+        scale = symmetric_scale(w * clip_ratio, axis=0, bits=bits,
+                                keepdims=False, where="weight")
         q = quantize(w, scale[None, :], bits)
         return QWeight(q.astype(jnp.int8), scale, bits, -1)
     if K % group_size != 0:
         raise ValueError(f"K={K} not divisible by group_size={group_size}")
     wg = w.reshape(K // group_size, group_size, N)
-    scale = symmetric_scale(wg * clip_ratio, axis=1, bits=bits, keepdims=False)
+    scale = symmetric_scale(wg * clip_ratio, axis=1, bits=bits, keepdims=False,
+                            where="weight")
     q = quantize(wg, scale[:, None, :], bits)
     return QWeight(q.reshape(K, N).astype(jnp.int8), scale, bits, group_size)
 
@@ -134,7 +157,8 @@ def quantize_activation(x: jax.Array, bits: int = 8):
 
     Returns (q int8, scale f32 broadcastable over last axis).
     """
-    scale = symmetric_scale(x.astype(jnp.float32), axis=-1, bits=bits)
+    scale = symmetric_scale(x.astype(jnp.float32), axis=-1, bits=bits,
+                            where="activation")
     q = quantize(x.astype(jnp.float32), scale, bits).astype(jnp.int8)
     return q, scale
 

@@ -28,40 +28,41 @@ stored alpha is what the PR-3 overflow certificates cover).
 On this CPU container only ``BlockConfig(interpret=True)`` executes; the
 BlockSpecs/grids are identical either way.
 
-Migration from the v1 API (one release of shims)
-------------------------------------------------
-==============================================  ===============================================
-old                                             new
-==============================================  ===============================================
-``qgemm(x, qvalue, scale, qspec, alpha=a)``     ``qgemm(x, {"qvalue": qvalue, "scale": scale,``
-                                                ``          "alpha": a}, qspec)``
-``qgemm_from_params(x, params, qspec)``         ``qgemm(x, params, qspec)``
-``qgemm_grouped(x, qvalue, scale, qspec)``      ``qgemm_grouped(x, params, qspec)``
-``qgemm_grouped_from_params(x, params, ...)``   ``qgemm_grouped(x, params, ...)``
-``interpret=True``                              ``block=BlockConfig(interpret=True)``
-``block=dict(bm=.., bn=.., bk=..)``             ``block=BlockConfig(bm=.., bn=.., bk=..)``
-==============================================  ===============================================
+The v1 shims (``*_from_params``, positional ``qvalue, scale``,
+``block=dict``, ``interpret=``) completed their one-release deprecation
+window and are GONE; legacy forms now raise ``TypeError``. The kernel mode
+itself ("reference" vs "pallas"[_interpret]) is NOT chosen here — callers
+pass it explicitly to ``qlinear.linear_apply`` / ``grouped_linear_apply``
+(see ``qlinear.kernel_mode`` for the script shim).
 
-Every legacy form still works but emits a ``DeprecationWarning``; the
-``*_from_params`` names and the dict/positional forms will be removed next
-release. The kernel mode itself ("reference" vs "pallas"[_interpret]) is
-NOT chosen here — callers pass it explicitly to ``qlinear.linear_apply`` /
-``grouped_linear_apply`` (see ``qlinear.kernel_mode`` for the script shim).
+Telemetry (repro.obs)
+---------------------
+Every wrapper call increments ``qgemm_calls_total{scheme,kind,shape,
+block}`` on the current registry. These are host/python-side counts: in
+eager code they count executions; inside jit they count TRACES (a useful
+retrace detector — steady-state serving holds them constant). Ragged
+grouped calls with CONCRETE ``row_counts`` additionally record executed-
+vs-total m-tiles (``qgemm_ragged_m_tiles_total{kind}``); traced counts
+are skipped here and accounted at execution time by the serving engine's
+routing sink instead. Per the repro.obs rule, nothing below reads or
+writes metrics from inside a kernel body.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
+import numpy as np
+
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.recipe import QuantSpec
 
 from .act_quant import act_quant
 from .moe_gemm import (fg_grouped_gemm_float_scale_ragged,
                        fg_grouped_gemm_integer_scale_ragged,
-                       grouped_w4a16_gemm_ragged)
+                       grouped_w4a16_gemm_ragged, ragged_tile_stats)
 from .w4a8_gemm import fg_gemm_integer_scale
 from .w4a8_gemm_fscale import fg_gemm_float_scale
 from .w4a16_gemm import w4a16_gemm
@@ -103,23 +104,14 @@ class BlockConfig:
 INTERPRET = BlockConfig(interpret=True)
 
 
-def _as_block(block, interpret=None) -> BlockConfig:
-    """Coerce None | legacy dict | BlockConfig (+ interpret override)."""
+def _as_block(block) -> BlockConfig:
     if block is None:
-        blk = BlockConfig()
-    elif isinstance(block, BlockConfig):
-        blk = block
-    elif isinstance(block, dict):
-        warnings.warn(
-            "block=dict(...) is deprecated; pass kernels.ops.BlockConfig",
-            DeprecationWarning, stacklevel=3)
-        blk = BlockConfig(**block)
-    else:
-        raise TypeError(f"block must be BlockConfig or None, got "
-                        f"{type(block).__name__}")
-    if interpret is not None and interpret != blk.interpret:
-        blk = dataclasses.replace(blk, interpret=bool(interpret))
-    return blk
+        return BlockConfig()
+    if isinstance(block, BlockConfig):
+        return block
+    raise TypeError(f"block must be BlockConfig or None, got "
+                    f"{type(block).__name__} (the dict form was removed "
+                    "with the v1 shims)")
 
 
 def _resolve_alpha(alpha, qspec: QuantSpec):
@@ -143,42 +135,66 @@ def _resolve_alpha(alpha, qspec: QuantSpec):
         "amplifiers")
 
 
-def _legacy_params(qvalue, scale, alpha) -> dict:
-    params = {"qvalue": qvalue, "scale": scale}
-    if alpha is not None:
-        params["alpha"] = alpha
-    return params
+def _scheme_of(qspec: QuantSpec) -> str:
+    if qspec.weight_only:
+        return f"w{qspec.w_bits}a16"
+    s = "is" if (qspec.scale_mode == "integer" and qspec.fine_grained) \
+        else "fs"
+    return f"w{qspec.w_bits}a{qspec.a_bits}-{s}"
+
+
+def _concrete(x):
+    """np array when x is host-concrete, None when traced."""
+    try:
+        return np.asarray(x)
+    except Exception:  # TracerArrayConversionError and friends
+        return None
+
+
+def _record_call(scheme: str, kind: str, shape: tuple, blk: BlockConfig,
+                 *, row_counts=None, capacity: int | None = None) -> None:
+    reg = obs.current_registry()
+    reg.counter(
+        "qgemm_calls_total",
+        "kernels.ops wrapper calls (trace-time under jit)",
+        ("scheme", "kind", "shape", "block"),
+    ).inc(scheme=scheme, kind=kind,
+          shape="x".join(str(d) for d in shape),
+          block=f"{blk.bm}x{blk.bn}x{blk.bk}")
+    if row_counts is None:
+        return
+    rc = _concrete(row_counts)
+    if rc is None:
+        return  # traced: the engine routing sink accounts these
+    st = ragged_tile_stats([int(v) for v in rc], int(capacity), blk.bm)
+    tiles = reg.counter(
+        "qgemm_ragged_m_tiles_total",
+        "host-visible ragged grouped m-tiles: executed vs dense total",
+        ("kind",))
+    tiles.inc(st["ragged_m_tiles"], kind="executed")
+    tiles.inc(st["dense_m_tiles"], kind="total")
 
 
 def qgemm(
     x: jax.Array,         # (M, K) bf16/f32 activations
     params: dict,         # qlinear param dict: qvalue, scale, alpha?
     qspec: QuantSpec = None,
-    *legacy,
-    alpha=None,
-    interpret: bool | None = None,
-    block: BlockConfig | dict | None = None,
+    *,
+    block: BlockConfig | None = None,
 ) -> jax.Array:
     """Quantized GEMM honoring ``qspec``; returns f32 (M, N).
 
     Scheme dispatch (weight-only W4A16 / fine-grained integer scale /
     float scale) comes from the qspec; operands from the param dict.
     """
-    if legacy:  # v1 positional form: qgemm(x, qvalue, scale, qspec, ...)
-        warnings.warn(
-            "qgemm(x, qvalue, scale, qspec) is deprecated; pass the param "
-            "dict: qgemm(x, {'qvalue': .., 'scale': .., 'alpha': ..}, "
-            "qspec)", DeprecationWarning, stacklevel=2)
-        if len(legacy) != 1:
-            raise TypeError(f"qgemm takes (x, params, qspec); got "
-                            f"{3 + len(legacy)} positional args")
-        params, qspec = _legacy_params(params, qspec, alpha), legacy[0]
-    elif not isinstance(params, dict):
+    if not isinstance(params, dict):
         raise TypeError(
-            "qgemm now takes the qlinear param dict as its second "
-            "argument (see the migration table in kernels/ops.py)")
-    blk = _as_block(block, interpret)
+            "qgemm takes the qlinear param dict as its second argument "
+            "(the v1 positional qvalue/scale form was removed)")
+    blk = _as_block(block)
     kw = blk.kernel_kwargs()
+    N = params["qvalue"].shape[-1]
+    _record_call(_scheme_of(qspec), "dense", (*x.shape, N), blk)
 
     if qspec.weight_only:
         if qspec.w_bits != 4:
@@ -207,11 +223,9 @@ def qgemm_grouped(
     x: jax.Array,         # (E, C, K) bf16/f32 dispatch buffer
     params: dict,         # stacked per-expert param dict
     qspec: QuantSpec = None,
-    *legacy,
-    alpha=None,
+    *,
     row_counts=None,      # int32 (E,) routed rows per expert | None=all C
-    interpret: bool | None = None,
-    block: BlockConfig | dict | None = None,
+    block: BlockConfig | None = None,
 ) -> jax.Array:
     """Batched-expert quantized GEMM; returns f32 (E, C, N).
 
@@ -225,22 +239,16 @@ def qgemm_grouped(
     ``row_counts[e]`` must be zero-filled (the MoE dispatch guarantees
     this); ``row_counts=None`` treats every capacity slot as routed.
     """
-    if legacy:  # v1 positional form
-        warnings.warn(
-            "qgemm_grouped(x, qvalue, scale, qspec) is deprecated; pass "
-            "the stacked param dict instead", DeprecationWarning,
-            stacklevel=2)
-        if len(legacy) != 1:
-            raise TypeError(f"qgemm_grouped takes (x, params, qspec); got "
-                            f"{3 + len(legacy)} positional args")
-        params, qspec = _legacy_params(params, qspec, alpha), legacy[0]
-    elif not isinstance(params, dict):
+    if not isinstance(params, dict):
         raise TypeError(
-            "qgemm_grouped now takes the stacked qlinear param dict as "
-            "its second argument (see the migration table in "
-            "kernels/ops.py)")
-    blk = _as_block(block, interpret)
+            "qgemm_grouped takes the stacked qlinear param dict as its "
+            "second argument (the v1 positional qvalue/scale form was "
+            "removed)")
+    blk = _as_block(block)
     kw = blk.kernel_kwargs()
+    N = params["qvalue"].shape[-1]
+    _record_call(_scheme_of(qspec), "grouped", (*x.shape, N), blk,
+                 row_counts=row_counts, capacity=x.shape[1])
 
     if qspec.weight_only:
         if qspec.w_bits != 4:
@@ -259,28 +267,3 @@ def qgemm_grouped(
         x, row_counts, params["qvalue"], params["scale"],
         group_size=qspec.group_size, a_bits=qspec.a_bits,
         w_bits=qspec.w_bits, **kw)
-
-
-# ---------------------------------------------------------------------------
-# v1 deprecation shims (one release; see module docstring migration table)
-# ---------------------------------------------------------------------------
-
-
-def qgemm_from_params(x, params: dict, qspec: QuantSpec, *, interpret=False,
-                      block=None):
-    """Deprecated alias of :func:`qgemm` (the param-dict form is now the
-    primary signature)."""
-    warnings.warn("qgemm_from_params is deprecated; call qgemm(x, params, "
-                  "qspec, block=...) directly", DeprecationWarning,
-                  stacklevel=2)
-    return qgemm(x, params, qspec, interpret=interpret, block=block)
-
-
-def qgemm_grouped_from_params(x, params: dict, qspec: QuantSpec, *,
-                              row_counts=None, interpret=False, block=None):
-    """Deprecated alias of :func:`qgemm_grouped`."""
-    warnings.warn("qgemm_grouped_from_params is deprecated; call "
-                  "qgemm_grouped(x, params, qspec, row_counts=..., "
-                  "block=...) directly", DeprecationWarning, stacklevel=2)
-    return qgemm_grouped(x, params, qspec, row_counts=row_counts,
-                         interpret=interpret, block=block)

@@ -328,8 +328,27 @@ def main() -> None:
                     print(f"[{rec['mesh']}] {arch} x {shape}: {tag} "
                           f"{extra}{msg}", flush=True)
     print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    _telemetry_cell()
     if n_err:
         raise SystemExit(1)
+
+
+def _telemetry_cell() -> None:
+    """Print the dry-run's registry snapshot: certificate verdicts and any
+    quantization-health counters ticked while lowering the serve cells
+    (everything here is eager/offline — the obs no-jit rule is moot)."""
+    from repro import obs
+
+    snap = obs.default_registry().snapshot()
+    c = snap["counters"]
+    cells = []
+    for name in ("qcert_verdicts_total", "quantized_layers_total",
+                 "alpha_cap_events_total", "int_scale_floor_hits_total",
+                 "amax_floor_hits_total"):
+        if c.get(name):
+            cells.append(f"{name}={c[name]}")
+    print("[dryrun] telemetry: " + ("; ".join(cells) if cells
+                                    else "no counters ticked"))
 
 
 if __name__ == "__main__":

@@ -3,20 +3,93 @@ batching engine over a stream of requests.
 
     PYTHONPATH=src:. python -m repro.launch.serve --algo gptq --requests 8 \
         --scale-mode integer
+
+``--arch mixtral-8x7b`` swaps the trained bench_lm for a smoke-shaped
+registry architecture (random init) — the quantized-MoE ragged decode
+path. ``--metrics-out PATH`` writes the run's telemetry as JSONL: one
+event per line (admit / tick / retire / trace / ptq_run) with a trailing
+``{"snapshot": ...}`` line carrying every counter/gauge/histogram —
+per-tick decode latency, TTFT/TPOT, executed-vs-total ragged m-tiles,
+capped-alpha counts. A telemetry cell summarizing the same snapshot is
+always printed, and steady-state ``decode_traces == 1`` is asserted so
+instrumentation can never silently add a retrace.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+import jax
+
+from repro import obs
 from repro.core import ptq
 from repro.core.recipe import QuantRecipe, QuantSpec
 from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.nn import spec as S
 from repro.serving.engine import Engine, ServeConfig
+
+
+def _load_model(arch: str):
+    if arch == "bench-lm":
+        from benchmarks.common import load_bench_model
+
+        return load_bench_model()
+    from repro.models.registry import get_arch, get_model
+
+    cfg = get_arch(arch, smoke=True)
+    api = get_model(cfg)
+    params = S.materialize(api.param_specs(cfg, None), jax.random.PRNGKey(0))
+    return api, cfg, params, False
+
+
+def _fmt_hist(h: dict) -> str:
+    n = h["count"]
+    return f"n={n} mean={h['sum'] / n * 1e3:.2f}ms" if n else "n=0"
+
+
+def _telemetry_cell(reg: obs.Registry) -> None:
+    snap = reg.snapshot()
+    c, g, h = snap["counters"], snap["gauges"], snap["histograms"]
+
+    def csum(name: str) -> float:
+        return sum(c.get(name, {}).values())
+
+    print("[serve] --- telemetry ---------------------------------------")
+    print(f"[serve] ticks={int(csum('engine_ticks_total'))} "
+          f"tokens={int(csum('engine_tokens_total'))} "
+          f"requests={c.get('engine_requests_total', {})} "
+          f"queue_depth={g.get('engine_queue_depth', {}).get('', 0)}")
+    phases = h.get("engine_phase_seconds", {})
+    for sk in sorted(phases):
+        print(f"[serve] phase {sk or '<all>'}: {_fmt_hist(phases[sk])}")
+    for name in ("engine_ttft_seconds", "engine_tpot_seconds"):
+        for sk, st in h.get(name, {}).items():
+            print(f"[serve] {name}{('{' + sk + '}') if sk else ''}: "
+                  f"{_fmt_hist(st)}")
+    tiles = c.get("engine_moe_m_tiles_total", {})
+    if tiles:
+        ex = tiles.get('kind="executed"', 0)
+        tot = tiles.get('kind="total"', 0)
+        frac = f" ({ex / tot:.2f}x dense)" if tot else ""
+        print(f"[serve] moe m-tiles executed/total={int(ex)}/{int(tot)}"
+              f"{frac}")
+    for name in ("qgemm_calls_total", "engine_traces_total",
+                 "qcert_verdicts_total"):
+        if c.get(name):
+            print(f"[serve] {name}: {c[name]}")
+    print(f"[serve] alpha_cap_events_total="
+          f"{int(csum('alpha_cap_events_total'))} "
+          f"int_scale_floor_hits_total="
+          f"{int(csum('int_scale_floor_hits_total'))} "
+          f"amax_floor_hits={c.get('amax_floor_hits_total', {})}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bench-lm",
+                    help="bench-lm (trained ckpt if present) or a registry "
+                         "architecture run at smoke shape, e.g. "
+                         "mixtral-8x7b")
     ap.add_argument("--algo", default="rtn",
                     choices=["rtn", "gptq", "awq", "smoothquant",
                              "omniquant"])
@@ -29,17 +102,21 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--prefill-len", type=int, default=32)
+    ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline)")
     ap.add_argument("--kernel-mode", default="reference",
                     choices=["reference", "pallas", "pallas_interpret"],
                     help="qlinear backend inside prefill/decode")
+    ap.add_argument("--metrics-out", default="",
+                    help="write telemetry JSONL (events + final snapshot "
+                         "line) to this path")
     args = ap.parse_args()
 
-    from benchmarks.common import calib_batches, load_bench_model
-
-    api, cfg, params, trained = load_bench_model()
+    reg = obs.default_registry()
+    api, cfg, params, trained = _load_model(args.arch)
     print(f"[serve] model={cfg.name} trained={trained}")
     if args.fp:
         recipe, qparams = None, params
@@ -50,18 +127,25 @@ def main() -> None:
                          group_size=args.group, scale_mode=args.scale_mode,
                          amplifier=amp, algo=args.algo)
         recipe = QuantRecipe(rules=(("*", spec),), name=spec.name)
+        calib = None
+        if args.arch == "bench-lm":
+            from benchmarks.common import calib_batches
+
+            calib = calib_batches(1)
         t0 = time.time()
         qparams = ptq.post_training_quantize(api, cfg, params, recipe,
-                                             calib_batches(1))
+                                             calib)
         print(f"[serve] quantized ({spec.name}) in {time.time()-t0:.1f}s")
 
-    sc = ServeConfig(max_slots=args.slots, max_seq=128, prefill_len=32,
+    sc = ServeConfig(max_slots=args.slots, max_seq=args.max_seq,
+                     prefill_len=args.prefill_len,
                      max_new_tokens=args.max_new,
                      temperature=args.temperature,
                      kernel_mode=args.kernel_mode)
     eng = Engine(api, cfg, qparams, sc, recipe=recipe)
     pipe = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size,
-                                        seq_len=32, batch_size=1))
+                                        seq_len=args.prefill_len,
+                                        batch_size=1))
     for i in range(args.requests):
         eng.submit(pipe.batch(300_000 + i)["tokens"][0].tolist())
     t0 = time.time()
@@ -72,6 +156,15 @@ def main() -> None:
           f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks)")
     for rid in sorted(outs)[:4]:
         print(f"[serve] r{rid}: {outs[rid][:16]}...")
+
+    # instrumentation must add zero retraces: row_counts stay traced
+    # operands, so steady-state decode compiles exactly once.
+    assert eng.decode_traces == 1, \
+        f"decode retraced {eng.decode_traces}x — telemetry broke jit"
+    _telemetry_cell(reg)
+    if args.metrics_out:
+        n = reg.write_events_jsonl(args.metrics_out)
+        print(f"[serve] wrote {n} telemetry lines -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

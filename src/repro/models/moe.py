@@ -104,37 +104,82 @@ def _int8_transport_bwd(_, g):
 _int8_transport.defvjp(_int8_transport_fwd, _int8_transport_bwd)
 
 
-# -- routing trace ----------------------------------------------------------
-# Observability hook for the serving benchmark: while a trace is active,
-# moe_apply emits a jax.debug.callback recording the per-expert routed
-# (capacity-clipped) counts of every MoE layer invocation, so per-tick
-# executed-m-tile accounting can be derived from the LIVE engine dispatch.
-# The callback is staged at trace time — start the trace BEFORE the first
-# (re)compile of the function you want observed; when no trace is active at
+# -- routing sinks ----------------------------------------------------------
+# Observability hook for the serving engine + benchmarks: while any sink is
+# registered, moe_apply stages a jax.debug.callback that delivers the
+# per-expert routed (capacity-clipped) counts of every MoE layer invocation
+# as {"counts": np (G, E), "capacity": int} records, so per-tick executed-
+# m-tile accounting can be derived from the LIVE engine dispatch. The
+# callback is STAGED at trace time — register a sink BEFORE the first
+# (re)compile of the function you want observed; when no sink is active at
 # trace time, compiled code carries no callback at all (zero overhead).
+# Dispatch to sinks happens at execution time, so sinks added after the
+# trace (while at least one was active) still receive records. Sinks may be
+# plain callables or weakref-wrapped methods (``weakref.WeakMethod``) —
+# dead weakrefs are pruned on delivery, letting the serving engine hook in
+# without keeping itself alive.
 
-_ROUTING_TRACE: list | None = None
+_ROUTING_SINKS: list = []
+
+
+def add_routing_sink(sink) -> None:
+    """Register ``sink(record: dict)`` (or a weakref to one)."""
+    _ROUTING_SINKS.append(sink)
+
+
+def remove_routing_sink(sink) -> None:
+    if sink in _ROUTING_SINKS:
+        _ROUTING_SINKS.remove(sink)
+
+
+def routing_sinks_active() -> bool:
+    return bool(_ROUTING_SINKS)
 
 
 def start_routing_trace() -> list:
-    """Begin recording {"counts": np (G,E), "capacity": int} per MoE call."""
-    global _ROUTING_TRACE
-    _ROUTING_TRACE = []
-    return _ROUTING_TRACE
+    """Begin recording {"counts": np (G,E), "capacity": int} per MoE call.
+
+    Convenience wrapper over the sink API: returns the live list records
+    append to; pass it to :func:`stop_routing_trace` when done.
+    """
+    records: list = []
+    add_routing_sink(records.append)
+    return records
 
 
-def stop_routing_trace() -> list:
-    global _ROUTING_TRACE
-    out, _ROUTING_TRACE = _ROUTING_TRACE, None
-    return out if out is not None else []
+def stop_routing_trace(records: list | None = None) -> list:
+    """Detach the list-sink ``start_routing_trace`` installed.
+
+    With no argument (legacy form) every list-append sink is detached —
+    callers that interleave traces should pass their own list back.
+    """
+    if records is not None:
+        remove_routing_sink(records.append)
+        return records
+    out: list = []
+    for s in list(_ROUTING_SINKS):
+        if getattr(s, "__self__", None).__class__ is list:
+            out = s.__self__
+            remove_routing_sink(s)
+    return out
 
 
 def _record_routing(counts, *, capacity: int) -> None:
-    if _ROUTING_TRACE is not None:
-        import numpy as np
+    """Host-side callback target: fan one record out to every live sink."""
+    import weakref
 
-        _ROUTING_TRACE.append({"counts": np.asarray(counts),
-                               "capacity": capacity})
+    import numpy as np
+
+    rec = {"counts": np.asarray(counts), "capacity": capacity}
+    for s in list(_ROUTING_SINKS):
+        if isinstance(s, weakref.ref):
+            live = s()
+            if live is None:
+                remove_routing_sink(s)
+                continue
+            live(rec)
+        else:
+            s(rec)
 
 
 def moe_specs(cfg: ModelConfig, recipe, base: str) -> dict:
@@ -233,7 +278,7 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, recipe,
     # single per-expert count — fall back to the dense (exact) behavior.
     row_counts = counts[0] if G == 1 else None
 
-    if _ROUTING_TRACE is not None:
+    if _ROUTING_SINKS:
         import functools
 
         jax.debug.callback(

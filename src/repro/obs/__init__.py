@@ -1,0 +1,71 @@
+"""repro.obs — serving + kernel telemetry (metrics registry, tick tracing).
+
+A dependency-free (stdlib-only) observability layer shared by the serving
+engine, the kernel dispatch wrappers, and the quantization pipeline:
+
+* :class:`Registry` — process-local counters / gauges / histograms with
+  labeled series, deterministic fixed-bucket histograms, a JSONL event
+  log, and a Prometheus-text snapshot. Instrumentation resolves the
+  active registry via :func:`current_registry` (process default, scoped
+  override via :func:`use_registry`).
+* :class:`Span` / :func:`span` — host-side wall-clock tick tracing that
+  lands in a histogram + the event log.
+
+What is instrumented where
+--------------------------
+* ``serving/engine.py``: per-tick admit/prefill/decode/retire spans
+  (``engine_phase_seconds``), tick/token/request counters, slot-occupancy
+  and queue-depth gauges, per-request TTFT/TPOT histograms, jit retrace
+  events (``engine_traces_total``), and per-tick executed-vs-total MoE
+  m-tile counters (``engine_moe_m_tiles_total``) fed by the routing sink
+  in ``models/moe.py``.
+* ``kernels/ops.py``: ``qgemm_calls_total{scheme,kind,shape,block}`` per
+  wrapper call, plus host-side ragged executed/total m-tile accounting
+  (``qgemm_ragged_m_tiles_total``) whenever ``row_counts`` is concrete.
+* ``core/qlinear.py`` / ``core/ptq.py`` / ``core/integer_scale.py`` /
+  ``analysis/certify.py``: quantization health — ``alpha_cap_events_total``,
+  ``qcert_verdicts_total{verdict}``, ``amax_floor_hits_total{where}``,
+  ``int_scale_floor_hits_total``, ``quantized_layers_total{scheme}``.
+* Surfacing: ``launch/serve.py --metrics-out`` (JSONL trace + final
+  snapshot line), ``launch/dryrun.py`` telemetry cell, and benchmark JSON
+  documents (``benchmarks/run.py`` / ``benchmarks/serving_moe.py`` attach
+  a registry snapshot + host provenance).
+
+THE RULE: no metrics inside jitted bodies
+-----------------------------------------
+Never read or write a metric from code that executes inside a traced /
+jitted computation. A python-side increment inside a traced function runs
+at TRACE time (once per compilation, not once per step) and anything
+fancier would either retrace or insert host syncs into the hot path.
+Instrument at these boundaries only:
+
+* host code around a jitted call (engine tick phases, wrapper entry
+  points — note wrapper counts are *trace-time* counts under jit, which
+  is exactly what makes them a retrace detector);
+* ``jax.debug.callback`` hooks staged at trace boundaries (the MoE
+  routing sink) whose callbacks run host-side at execution time;
+* offline paths that are eager by construction (PTQ, certification).
+
+Data-dependent values (e.g. ragged ``row_counts``) may only be recorded
+when they are concrete — guard with a ``np.asarray`` try/except and skip
+silently when traced.
+
+How to add a new counter
+------------------------
+1. Pick the layer's boundary per the rule above. 2. Create lazily at the
+use site — ``obs.current_registry().counter("my_total", "help",
+("label",)).inc(label="x")``; get-or-create is idempotent, so no central
+declaration list exists. 3. Create the metric unconditionally and ``inc``
+conditionally when dashboards must see an explicit zero (e.g.
+``alpha_cap_events_total``). 4. Name per Prometheus convention:
+``*_total`` counters, ``*_seconds`` histograms, unit-suffixed gauges.
+"""
+from .metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                      Registry, current_registry, default_registry,
+                      use_registry)
+from .tracing import Span, span
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS", "Counter", "Gauge", "Histogram", "Registry",
+    "Span", "current_registry", "default_registry", "span", "use_registry",
+]

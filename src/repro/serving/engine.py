@@ -7,23 +7,39 @@ sequences (eos / max_new) retire and free their slot. This is the
 end-to-end path the paper accelerates: all linear layers inside run the
 fine-grained quantized GEMMs when a recipe is attached.
 
-Scale note: on a real mesh the cache lives sharded (cache_batch -> data,
-cache_seq -> model) and this same engine drives pjit'd prefill/decode fns;
-here it runs CPU-sized models end-to-end for the examples and tests.
+Telemetry (repro.obs): every tick emits admit/prefill/decode/retire spans
+into ``engine_phase_seconds{phase}`` plus a ``tick`` event carrying the
+decode latency, slot occupancy, and queue depth; per request the engine
+observes TTFT (submit -> first token) and TPOT (mean inter-token time)
+histograms and emits ``admit``/``retire`` events. Jit retraces bump
+``engine_traces_total{fn}`` and emit a ``trace`` event (the per-engine
+``prefill_traces``/``decode_traces`` properties keep their exact PR-2
+semantics — steady-state serving must hold decode at ONE trace, asserted
+in tests). MoE routing records delivered by the ``models.moe`` sink are
+folded into ``engine_moe_m_tiles_total{kind=executed|total}`` so ragged
+skipping is continuously observable from the LIVE dispatch. All of it is
+host-side at trace/tick boundaries — nothing records from inside the
+jitted bodies (see ``repro.obs``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import weakref
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.models import moe
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi
 from repro.nn import spec as S
 from . import sampler
+
+_PALLAS_MODES = ("pallas", "pallas_interpret")
 
 
 @dataclasses.dataclass
@@ -50,6 +66,7 @@ class _Slot:
     length: int = 0            # tokens currently in cache
     generated: list = dataclasses.field(default_factory=list)
     active: bool = False
+    t_first: float = 0.0       # perf_counter at first generated token
 
 
 class Engine:
@@ -65,9 +82,10 @@ class Engine:
         self.recipe = recipe
         # trace counters: jit retraces bump these (the per-tick row_counts
         # of a quantized-MoE decode are traced operands, so steady-state
-        # serving must keep decode_traces at 1 — asserted in tests).
-        self.prefill_traces = 0
-        self.decode_traces = 0
+        # serving must keep decode_traces at 1 — asserted in tests). Kept
+        # PER ENGINE (several engines may share one registry sequentially);
+        # the registry additionally gets engine_traces_total + an event.
+        self._trace_counts = {"prefill": 0, "decode": 0}
         B = serve_cfg.max_slots
         cspecs = api.cache_specs(cfg, B, serve_cfg.max_seq)
         self.cache = jax.tree.map(
@@ -78,6 +96,14 @@ class Engine:
         self._next_id = 0
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._steps = 0
+        self._submit_t: dict[int, float] = {}
+        # MoE routing sink: a WeakMethod, because the jitted closures below
+        # capture ``self`` into reference cycles that delay __del__ — a
+        # strong sink would pin retired engines alive in the global list.
+        # Installed BEFORE the first trace so the callback gets staged.
+        self._routing_buf: list[dict] = []
+        self._routing_sink = weakref.WeakMethod(self._on_routing)
+        moe.add_routing_sink(self._routing_sink)
 
         # jit'd single-request prefill (batch 1, fixed length).
         # mode="train" + cache: returns FULL-sequence logits (the engine
@@ -85,7 +111,7 @@ class Engine:
         # padded end) while still populating the KV cache. mode="prefill"
         # keeps its last-token-only slicing for the serving dry-run.
         def prefill_fn(params, tokens, cache1):
-            self.prefill_traces += 1
+            self._note_trace("prefill")
             logits, cache1, _ = self.api.apply(
                 params, self.cfg, tokens, recipe=recipe, mode="train",
                 cache=cache1, pos=0)
@@ -95,7 +121,7 @@ class Engine:
 
         # jit'd batched decode with per-slot positions
         def decode_fn(params, tokens, cache, pos_vec):
-            self.decode_traces += 1
+            self._note_trace("decode")
             logits, cache, _ = self.api.apply(
                 params, self.cfg, tokens, recipe=recipe, mode="decode",
                 cache=cache, pos=pos_vec)
@@ -109,18 +135,86 @@ class Engine:
             lambda s: (s.logical_axes.index("cache_batch")
                        if "cache_batch" in s.logical_axes else 0),
             cspecs, is_leaf=S.is_spec)
+        # pre-create the headline series so snapshots show explicit zeros
+        # even before the first tick
+        reg = obs.current_registry()
+        reg.counter("engine_ticks_total", "batched decode ticks")
+        reg.counter("engine_tokens_total", "tokens decoded across slots")
+        reg.counter("engine_requests_total", "request lifecycle events",
+                    ("event",))
+        reg.counter("engine_moe_m_tiles_total",
+                    "MoE grouped-GEMM m-tiles from live routing: executed "
+                    "(ragged skipping applied) vs dense total", ("kind",))
+
+    # -- telemetry plumbing -------------------------------------------------
+    def _note_trace(self, fn: str) -> None:
+        """Runs at TRACE time inside the jitted closures (host python) —
+        each execution of compiled code does NOT pass through here, which
+        is exactly what makes it a retrace detector."""
+        self._trace_counts[fn] += 1
+        reg = obs.current_registry()
+        reg.counter("engine_traces_total", "jit traces per engine function",
+                    ("fn",)).inc(fn=fn)
+        reg.emit({"ev": "trace", "fn": fn,
+                  "engine_count": self._trace_counts[fn]})
+
+    @property
+    def prefill_traces(self) -> int:
+        return self._trace_counts["prefill"]
+
+    @property
+    def decode_traces(self) -> int:
+        return self._trace_counts["decode"]
+
+    def _on_routing(self, rec: dict) -> None:
+        self._routing_buf.append(rec)
+
+    def _drain_routing(self) -> None:
+        """Fold buffered MoE routing records (delivered host-side by
+        jax.debug.callback during the forced computation) into the
+        executed-vs-total m-tile counters. Ragged skipping only applies on
+        the Pallas paths with a single dispatch group (G == 1) — other
+        configurations execute densely."""
+        if not self._routing_buf:
+            return
+        from repro.kernels.moe_gemm import ragged_tile_stats
+
+        tiles = obs.current_registry().counter(
+            "engine_moe_m_tiles_total", "", ("kind",))
+        ragged_ok = self.cfg.kernel_mode in _PALLAS_MODES
+        executed = total = 0
+        buf, self._routing_buf = self._routing_buf, []
+        for rec in buf:
+            counts = rec["counts"]
+            C = rec["capacity"]
+            for g in range(counts.shape[0]):
+                st = ragged_tile_stats([int(v) for v in counts[g]], C)
+                total += st["dense_m_tiles"]
+                executed += (st["ragged_m_tiles"]
+                             if ragged_ok and counts.shape[0] == 1
+                             else st["dense_m_tiles"])
+        tiles.inc(executed, kind="executed")
+        tiles.inc(total, kind="total")
+
+    def close(self) -> None:
+        """Detach the routing sink (tests / explicit lifecycle). Safe to
+        skip: the WeakMethod is pruned automatically once the engine dies."""
+        moe.remove_routing_sink(self._routing_sink)
 
     # -- public API ------------------------------------------------------------
     def submit(self, prompt: list[int]) -> int:
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, list(prompt)))
+        self._submit_t[rid] = time.perf_counter()
         return rid
 
     def run(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
+        reg = obs.current_registry()
         while (self.queue or any(s.active for s in self.slots)) \
                 and self._steps < max_ticks:
-            self._admit()
+            with obs.span(reg, "engine_phase_seconds", phase="admit"):
+                self._admit()
             self._tick()
         return dict(self.outputs)
 
@@ -133,62 +227,108 @@ class Engine:
         return [i for i, s in enumerate(self.slots) if not s.active]
 
     def _admit(self) -> None:
+        reg = obs.current_registry()
         for i in self._free_slots():
             if not self.queue:
                 break
             rid, prompt = self.queue.pop(0)
-            P = self.sc.prefill_len
-            toks = (prompt[:P] + [0] * max(0, P - len(prompt)))
-            true_len = min(len(prompt), P)
-            cache1 = jax.tree.map(
-                lambda s: jnp.zeros(s.shape, s.dtype),
-                self._cache1_specs, is_leaf=S.is_spec)
-            logits, cache1 = self._prefill(
-                self.params, jnp.asarray([toks], jnp.int32), cache1)
+            with obs.span(reg, "engine_phase_seconds", phase="prefill",
+                          event="admit") as sp:
+                P = self.sc.prefill_len
+                toks = (prompt[:P] + [0] * max(0, P - len(prompt)))
+                true_len = min(len(prompt), P)
+                cache1 = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype),
+                    self._cache1_specs, is_leaf=S.is_spec)
+                logits, cache1 = self._prefill(
+                    self.params, jnp.asarray([toks], jnp.int32), cache1)
 
-            # splice the prefilled slot into the batched cache along each
-            # leaf's batch axis (scanned leaves lead with the layer axis)
-            def splice(C, c, ax):
-                idx = tuple([slice(None)] * ax + [i])
-                return C.at[idx].set(jnp.take(c, 0, axis=ax))
+                # splice the prefilled slot into the batched cache along
+                # each leaf's batch axis (scanned leaves lead with layers)
+                def splice(C, c, ax):
+                    idx = tuple([slice(None)] * ax + [i])
+                    return C.at[idx].set(jnp.take(c, 0, axis=ax))
 
-            self.cache = jax.tree.map(splice, self.cache, cache1,
-                                      self._batch_axes)
-            # token 0 must honor the sampling settings too — greedy argmax
-            # here ignored temperature/top_k for the first generated token
-            self._key, k = jax.random.split(self._key)
-            first = int(np.asarray(sampler.sample(
-                logits[:, true_len - 1], k,
-                temperature=self.sc.temperature, top_k=self.sc.top_k))[0])
-            self.slots[i] = _Slot(request_id=rid, length=true_len,
-                                  generated=[first], active=True)
+                self.cache = jax.tree.map(splice, self.cache, cache1,
+                                          self._batch_axes)
+                # token 0 must honor the sampling settings too — greedy
+                # argmax here ignored temperature/top_k for the first token
+                self._key, k = jax.random.split(self._key)
+                first = int(np.asarray(sampler.sample(
+                    logits[:, true_len - 1], k,
+                    temperature=self.sc.temperature,
+                    top_k=self.sc.top_k))[0])
+                t_first = time.perf_counter()
+                self.slots[i] = _Slot(request_id=rid, length=true_len,
+                                      generated=[first], active=True,
+                                      t_first=t_first)
+                sp.fields.update(rid=rid, slot=i, prompt_len=true_len)
+                t_sub = self._submit_t.pop(rid, None)
+                if t_sub is not None:
+                    ttft = t_first - t_sub
+                    reg.histogram(
+                        "engine_ttft_seconds",
+                        "submit -> first generated token").observe(ttft)
+                    sp.fields["ttft_s"] = round(ttft, 6)
+            reg.counter("engine_requests_total", "", ("event",)).inc(
+                event="admitted")
+        self._drain_routing()
 
     def _tick(self) -> None:
         if not any(s.active for s in self.slots):
             return
+        reg = obs.current_registry()
         B = self.sc.max_slots
         last = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
+        active = 0
         for i, s in enumerate(self.slots):
             if s.active:
                 last[i, 0] = s.generated[-1]
                 pos[i] = s.length
-        self._key, k = jax.random.split(self._key)
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(last), self.cache, jnp.asarray(pos))
-        nxt = sampler.sample(logits, k, temperature=self.sc.temperature,
-                             top_k=self.sc.top_k)
-        nxt = np.asarray(nxt)
+                active += 1
+        with obs.span(reg, "engine_phase_seconds", phase="decode",
+                      event="tick") as sp:
+            self._key, k = jax.random.split(self._key)
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(last), self.cache,
+                jnp.asarray(pos))
+            nxt = sampler.sample(logits, k,
+                                 temperature=self.sc.temperature,
+                                 top_k=self.sc.top_k)
+            nxt = np.asarray(nxt)  # forces the step (+ its callbacks)
+            sp.fields.update(tick=self._steps, slots_active=active,
+                             queue_depth=len(self.queue))
         self._steps += 1
-        for i, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            s.length += 1
-            tok = int(nxt[i])
-            s.generated.append(tok)
-            done = (tok == self.sc.eos_id
-                    or len(s.generated) >= self.sc.max_new_tokens
-                    or s.length + 1 >= self.sc.max_seq)
-            if done:
-                self.outputs[s.request_id] = list(s.generated)
-                self.slots[i] = _Slot()
+        reg.counter("engine_ticks_total", "").inc()
+        reg.counter("engine_tokens_total", "").inc(active)
+        self._drain_routing()
+        with obs.span(reg, "engine_phase_seconds", phase="retire"):
+            for i, s in enumerate(self.slots):
+                if not s.active:
+                    continue
+                s.length += 1
+                tok = int(nxt[i])
+                s.generated.append(tok)
+                done = (tok == self.sc.eos_id
+                        or len(s.generated) >= self.sc.max_new_tokens
+                        or s.length + 1 >= self.sc.max_seq)
+                if done:
+                    self.outputs[s.request_id] = list(s.generated)
+                    n = len(s.generated)
+                    tpot = ((time.perf_counter() - s.t_first)
+                            / max(1, n - 1))
+                    reg.histogram(
+                        "engine_tpot_seconds",
+                        "mean inter-token latency per request").observe(
+                            tpot)
+                    reg.counter("engine_requests_total", "",
+                                ("event",)).inc(event="retired")
+                    reg.emit({"ev": "retire", "rid": s.request_id,
+                              "tokens": n, "tpot_s": round(tpot, 6)})
+                    self.slots[i] = _Slot()
+        reg.gauge("engine_slots_active",
+                  "occupied decode slots after retire").set(
+                      sum(1 for s in self.slots if s.active))
+        reg.gauge("engine_queue_depth", "requests waiting for a slot").set(
+            len(self.queue))

@@ -1,0 +1,231 @@
+"""repro.obs: registry determinism, label isolation, Prometheus golden,
+and engine telemetry wired end-to-end (ragged m-tile ground truth)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.kernels.moe_gemm import ragged_tile_stats
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestHistogram:
+    def test_deterministic_bucketing(self):
+        reg = obs.Registry()
+        h = reg.histogram("lat_seconds", "t", buckets=(0.01, 0.1, 1.0))
+        for v in (0.005, 0.01, 0.02, 0.5, 2.0):  # 0.01 is inclusive (le)
+            h.observe(v)
+        st = h.get()
+        assert st["buckets"] == [2, 1, 1, 1]  # last slot = +Inf overflow
+        assert st["count"] == 5
+        assert st["sum"] == pytest.approx(2.535)
+        assert h.cumulative() == {"0.01": 2, "0.1": 3, "1": 4, "+Inf": 5}
+
+    def test_edges_frozen_and_sorted(self):
+        reg = obs.Registry()
+        h = reg.histogram("h", "", buckets=(1.0, 0.5))
+        assert h.buckets == (0.5, 1.0)
+        # get-or-create returns the SAME metric; edges cannot be re-declared
+        assert reg.histogram("h", "", buckets=(9.0,)) is h
+        assert h.buckets == (0.5, 1.0)
+
+    def test_empty_or_duplicate_edges_rejected(self):
+        reg = obs.Registry()
+        with pytest.raises(ValueError):
+            reg.histogram("a", "", buckets=())
+        with pytest.raises(ValueError):
+            reg.histogram("b", "", buckets=(1.0, 1.0))
+
+
+class TestLabels:
+    def test_series_isolation(self):
+        reg = obs.Registry()
+        c = reg.counter("calls_total", "", ("scheme", "kind"))
+        c.inc(scheme="is", kind="dense")
+        c.inc(3, scheme="is", kind="grouped")
+        c.inc(scheme="fs", kind="dense")
+        assert c.get(scheme="is", kind="dense") == 1
+        assert c.get(scheme="is", kind="grouped") == 3
+        assert c.get(scheme="fs", kind="grouped") == 0
+        assert c.total() == 5
+
+    def test_label_mismatch_rejected(self):
+        reg = obs.Registry()
+        c = reg.counter("c", "", ("a",))
+        with pytest.raises(ValueError):
+            c.inc(b="x")
+        with pytest.raises(ValueError):
+            c.inc()  # missing declared label
+
+    def test_redeclaration_shape_checked(self):
+        reg = obs.Registry()
+        reg.counter("m", "", ("a",))
+        with pytest.raises(ValueError):
+            reg.gauge("m", "", ("a",))
+        with pytest.raises(ValueError):
+            reg.counter("m", "", ("a", "b"))
+
+    def test_counter_monotone(self):
+        reg = obs.Registry()
+        with pytest.raises(ValueError):
+            reg.counter("c", "").inc(-1)
+
+
+class TestPrometheusGolden:
+    def test_golden_snapshot(self):
+        reg = obs.Registry()
+        reg.counter("b_total", "calls", ("scheme",)).inc(2, scheme="is")
+        reg.counter("b_total", "calls", ("scheme",)).inc(scheme="fs")
+        reg.gauge("a_depth", "queue").set(3)
+        h = reg.histogram("c_seconds", "lat", ("phase",),
+                          buckets=(0.1, 1.0))
+        h.observe(0.05, phase="decode")
+        h.observe(0.5, phase="decode")
+        golden = "\n".join([
+            '# HELP a_depth queue',
+            '# TYPE a_depth gauge',
+            'a_depth 3',
+            '# HELP b_total calls',
+            '# TYPE b_total counter',
+            'b_total{scheme="fs"} 1',
+            'b_total{scheme="is"} 2',
+            '# HELP c_seconds lat',
+            '# TYPE c_seconds histogram',
+            'c_seconds_bucket{phase="decode",le="0.1"} 1',
+            'c_seconds_bucket{phase="decode",le="1"} 2',
+            'c_seconds_bucket{phase="decode",le="+Inf"} 2',
+            'c_seconds_sum{phase="decode"} 0.55',
+            'c_seconds_count{phase="decode"} 2',
+        ]) + "\n"
+        assert reg.prometheus_text() == golden
+        # deterministic: a second render is byte-identical
+        assert reg.prometheus_text() == golden
+
+
+class TestRegistryStackAndEvents:
+    def test_use_registry_isolates(self):
+        inner = obs.Registry()
+        obs.current_registry().counter("x_total", "")
+        with obs.use_registry(inner):
+            assert obs.current_registry() is inner
+            inner2 = obs.Registry()
+            with obs.use_registry(inner2):
+                assert obs.current_registry() is inner2
+            assert obs.current_registry() is inner
+        assert obs.current_registry() is not inner
+
+    def test_events_jsonl_roundtrip(self, tmp_path):
+        reg = obs.Registry()
+        reg.emit({"ev": "tick", "n": 1})
+        reg.emit({"ev": "retire", "rid": 7})
+        reg.counter("t_total", "").inc()
+        p = tmp_path / "m.jsonl"
+        n = reg.write_events_jsonl(str(p))
+        lines = [json.loads(ln) for ln in p.read_text().splitlines()]
+        assert n == 3 and len(lines) == 3
+        assert [ln.get("ev") for ln in lines[:2]] == ["tick", "retire"]
+        assert lines[0]["seq"] == 1 and lines[1]["seq"] == 2
+        snap = lines[-1]["snapshot"]
+        assert snap["counters"]["t_total"] == {"": 1.0}
+        assert snap["events_total"] == 2
+
+    def test_span_records_histogram_and_event(self):
+        reg = obs.Registry()
+        with obs.span(reg, "p_seconds", event="tick", phase="decode") as sp:
+            sp.fields["tick"] = 0
+        assert sp.seconds >= 0
+        st = reg.histogram("p_seconds", "", ("phase",)).get(phase="decode")
+        assert st["count"] == 1
+        ev = reg.events()[-1]
+        assert ev["ev"] == "tick" and ev["phase"] == "decode"
+        assert ev["tick"] == 0 and "seconds" in ev
+
+
+class TestEngineTelemetry:
+    """Engine run (pallas_interpret, Mixtral smoke shape): ragged
+    executed-m-tile counters must match ``ragged_tile_stats`` ground truth
+    (the same accounting tests/test_moe_ragged.py validates against the
+    kernel), and instrumentation must add zero retraces."""
+
+    @pytest.fixture(scope="class")
+    def run(self):
+        from repro.core import ptq
+        from repro.core.recipe import DEFAULT_RECIPE
+        from repro.models import moe
+        from repro.models.registry import get_arch, get_model
+        from repro.nn import spec as S
+        from repro.serving.engine import Engine, ServeConfig
+
+        cfg = get_arch("mixtral-8x7b", smoke=True)
+        api = get_model(cfg)
+        params = S.materialize(api.param_specs(cfg, None),
+                               jax.random.PRNGKey(0))
+        reg = obs.Registry()
+        with obs.use_registry(reg):
+            qp = ptq.post_training_quantize(api, cfg, params,
+                                            DEFAULT_RECIPE, None)
+            sc = ServeConfig(max_slots=2, max_seq=32, prefill_len=8,
+                             max_new_tokens=3,
+                             kernel_mode="pallas_interpret")
+            trace = moe.start_routing_trace()
+            eng = Engine(api, cfg, qp, sc, recipe=DEFAULT_RECIPE)
+            rng = np.random.default_rng(0)
+            for _ in range(3):
+                eng.submit(rng.integers(1, cfg.vocab_size, 6).tolist())
+            outs = eng.run()
+            moe.stop_routing_trace(trace)
+            eng.close()
+        return reg, eng, trace, outs
+
+    def test_ragged_m_tiles_match_ground_truth(self, run):
+        reg, eng, trace, _ = run
+        assert trace, "routing trace captured no records"
+        expected_exec = expected_total = 0
+        for rec in trace:
+            counts, C = rec["counts"], rec["capacity"]
+            for g in range(counts.shape[0]):
+                st = ragged_tile_stats([int(v) for v in counts[g]], C)
+                expected_total += st["dense_m_tiles"]
+                expected_exec += (st["ragged_m_tiles"]
+                                  if counts.shape[0] == 1
+                                  else st["dense_m_tiles"])
+        tiles = reg.snapshot()["counters"]["engine_moe_m_tiles_total"]
+        assert tiles['kind="executed"'] == expected_exec
+        assert tiles['kind="total"'] == expected_total
+        assert 0 < expected_exec < expected_total  # skipping really engaged
+
+    def test_no_retrace_and_tick_accounting(self, run):
+        reg, eng, _, outs = run
+        assert eng.decode_traces == 1
+        assert eng.prefill_traces == 1
+        snap = reg.snapshot()
+        c = snap["counters"]
+        assert c["engine_traces_total"] == {'fn="decode"': 1.0,
+                                            'fn="prefill"': 1.0}
+        assert c["engine_ticks_total"][""] == eng.ticks
+        assert c["engine_requests_total"] == {'event="admitted"': 3.0,
+                                              'event="retired"': 3.0}
+        assert c["engine_tokens_total"][""] == sum(
+            len(v) - 1 for v in outs.values())  # first token from prefill
+        # per-request latency histograms: one observation per request
+        h = snap["histograms"]
+        assert h["engine_ttft_seconds"][""]["count"] == 3
+        assert h["engine_tpot_seconds"][""]["count"] == 3
+        assert h["engine_phase_seconds"]['phase="decode"']["count"] \
+            == eng.ticks
+        # headline health keys exist in the snapshot (explicit zeros ok)
+        assert c["alpha_cap_events_total"] == {"": 0.0}
+        assert any('scheme="w4a8-is"' in k
+                   for k in c["qgemm_calls_total"])
+
+    def test_events_carry_decode_latency_and_rids(self, run):
+        reg, _, _, outs = run
+        evs = reg.events()
+        ticks = [e for e in evs if e.get("ev") == "tick"]
+        assert ticks and all("seconds" in e and "slots_active" in e
+                             for e in ticks)
+        retired = {e["rid"] for e in evs if e.get("ev") == "retire"}
+        assert retired == set(outs)

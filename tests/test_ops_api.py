@@ -1,6 +1,5 @@
-"""kernels.ops v2 call convention: BlockConfig, shims, alpha resolution."""
-import warnings
-
+"""kernels.ops v2 call convention: BlockConfig, alpha resolution, and the
+hard removal of the v1 shims (their one-release window has passed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,14 +35,13 @@ class TestBlockConfig:
         with pytest.raises(Exception):
             ops.BlockConfig().bm = 64
 
-    def test_legacy_dict_coerces_with_warning(self):
-        with pytest.warns(DeprecationWarning):
-            blk = ops._as_block({"bm": 64, "bn": 128, "bk": 256}, True)
-        assert blk == ops.BlockConfig(bm=64, bn=128, bk=256, interpret=True)
+    def test_dict_form_removed(self):
+        with pytest.raises(TypeError, match="BlockConfig"):
+            ops._as_block({"bm": 64, "bn": 128, "bk": 256})
 
     def test_rejects_non_block(self):
         with pytest.raises(TypeError):
-            ops._as_block("128x256", None)
+            ops._as_block("128x256")
 
 
 class TestUnifiedQgemm:
@@ -54,27 +52,25 @@ class TestUnifiedQgemm:
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=2e-3, atol=2e-2)
 
-    def test_legacy_positional_form_warns_and_matches(self):
+    def test_legacy_positional_form_raises(self):
         spec, params, x = _dense_case()
-        y_new = ops.qgemm(x, params, spec, block=ops.INTERPRET)
-        with pytest.warns(DeprecationWarning):
-            y_old = ops.qgemm(x, params["qvalue"], params["scale"], spec,
-                              alpha=params["alpha"], interpret=True)
-        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+        with pytest.raises(TypeError):
+            ops.qgemm(x, params["qvalue"], params["scale"], spec,
+                      alpha=params["alpha"], interpret=True)
 
-    def test_from_params_shim_warns_and_matches(self):
+    def test_from_params_shim_removed(self):
+        assert not hasattr(ops, "qgemm_from_params")
+        assert not hasattr(ops, "qgemm_grouped_from_params")
+
+    def test_interpret_kwarg_removed(self):
         spec, params, x = _dense_case()
-        y_new = ops.qgemm(x, params, spec, block=ops.INTERPRET)
-        with pytest.warns(DeprecationWarning):
-            y_old = ops.qgemm_from_params(x, params, spec, interpret=True)
-        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+        with pytest.raises(TypeError):
+            ops.qgemm(x, params, spec, interpret=True)
 
     def test_non_dict_params_raises(self):
         spec, params, x = _dense_case()
-        with pytest.raises(TypeError):
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore")
-                ops.qgemm(x, params["qvalue"], spec)
+        with pytest.raises(TypeError, match="param dict"):
+            ops.qgemm(x, params["qvalue"], spec)
 
 
 class TestUnifiedQgemmGrouped:
@@ -96,15 +92,10 @@ class TestUnifiedQgemmGrouped:
         np.testing.assert_array_equal(
             np.asarray(y, np.float32), np.asarray(y_ref, np.float32))
 
-    def test_grouped_from_params_shim(self):
+    def test_grouped_legacy_positional_raises(self):
         spec, params, x = self._grouped_case()
-        rc = jnp.asarray([7, 16], jnp.int32)
-        y_new = ops.qgemm_grouped(x, params, spec, row_counts=rc,
-                                  block=ops.INTERPRET)
-        with pytest.warns(DeprecationWarning):
-            y_old = ops.qgemm_grouped_from_params(
-                x, params, spec, row_counts=rc, interpret=True)
-        np.testing.assert_array_equal(np.asarray(y_old), np.asarray(y_new))
+        with pytest.raises(TypeError, match="param dict"):
+            ops.qgemm_grouped(x, params["qvalue"], spec)
 
 
 class TestAlphaResolution:
@@ -135,12 +126,6 @@ class TestKernelModeContext:
             with qlinear.kernel_mode("cuda"):
                 pass
 
-    def test_legacy_setter_warns_and_maps_onto_stack(self):
-        with pytest.warns(DeprecationWarning):
-            qlinear.set_default_kernel_mode("pallas_interpret")
-        try:
-            assert qlinear.current_kernel_mode() == "pallas_interpret"
-        finally:
-            with pytest.warns(DeprecationWarning):
-                qlinear.set_default_kernel_mode("reference")
-        assert qlinear.current_kernel_mode() == "reference"
+    def test_legacy_setter_removed(self):
+        assert not hasattr(qlinear, "set_default_kernel_mode")
+        assert not hasattr(qlinear, "default_kernel_mode")
