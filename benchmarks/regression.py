@@ -1,0 +1,189 @@
+"""Benchmark regression gate: turn two ``benchmarks.run --json``
+documents into an enforced perf contract.
+
+    PYTHONPATH=src python -m benchmarks.regression \
+        --baseline results/bench_baseline.json \
+        --current bench-results.json
+
+Rows are matched by a (module/config, kernel-mode) key: the row ``name``
+(e.g. ``serving-moe/ragged-is`` — module + route/kernel-mode) plus the
+*identity* fields parsed from its ``derived`` string (``arch=``, shape
+dims, ``bm=`` ... — everything except the measured metrics). For every
+matched pair the gate fails (exit 1) when:
+
+* a baseline row has no current counterpart (coverage silently shrank);
+* the current row is an ``*/ERROR`` row;
+* latency (``us_per_call``) grew beyond ``--latency-tol`` (relative);
+* throughput (``tok_per_s=`` in ``derived``) fell beyond ``--tps-tol``;
+* a correctness contract flipped: any ``bit_exact*=True`` became
+  ``False``, or ``decode_traces`` grew (instrumentation added a
+  retrace).
+
+Timing tolerances default WIDE (CPU interpret-mode proxies on shared CI
+runners are noisy; the contract flags order-of-magnitude cliffs and
+structural drift, not jitter). New current-only rows are reported but
+never fail — adding coverage is free.
+
+Refreshing the baseline INTENTIONALLY (new kernel, config rename,
+machine change): rerun the sweep on the reference machine and commit the
+result, calling it out in the PR —
+
+    PYTHONPATH=src python -m benchmarks.run --fast \
+        --json results/bench_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+#: derived-string fields that are measurements, not row identity.
+MEASURED_FIELDS = frozenset({
+    "tok_per_s", "us_per_call", "elapsed_s", "ticks", "tokens",
+    "dense_m_tiles", "ragged_m_tiles", "m_tiles", "decode_traces",
+    "ppl", "ppl_fp", "ppl_q", "delta", "best", "mean", "gbps", "flops",
+    "util", "us", "ms", "s",
+})
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    """``k=v;free-text;k2=v2`` -> {k: v} (segments without '=' ignored)."""
+    out = {}
+    for seg in derived.split(";"):
+        if "=" in seg:
+            k, v = seg.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def row_key(row: dict) -> str:
+    """(module/config, kernel-mode) identity: name + sorted non-measured
+    derived fields."""
+    fields = parse_derived(row.get("derived", ""))
+    ident = sorted((k, v) for k, v in fields.items()
+                   if k not in MEASURED_FIELDS and not k.startswith("bit_"))
+    return row["name"] + "".join(f";{k}={v}" for k, v in ident)
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows: dict[str, dict] = {}
+    for row in doc.get("rows", []):
+        key = row_key(row)
+        n = 1
+        while key in rows:  # rare: disambiguate true duplicates
+            n += 1
+            key = f"{row_key(row)}#{n}"
+        rows[key] = row
+    return rows
+
+
+def _tps(row: dict) -> float | None:
+    v = parse_derived(row.get("derived", "")).get("tok_per_s")
+    try:
+        return float(v) if v is not None else None
+    except ValueError:
+        return None
+
+
+def compare(base: dict[str, dict], cur: dict[str, dict], *,
+            latency_tol: float, tps_tol: float,
+            min_us: float = 50.0) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes). ``min_us`` skips latency ratios on
+    sub-noise-floor rows (a 5us row doubling is scheduler jitter)."""
+    failures: list[str] = []
+    notes: list[str] = []
+    for key in sorted(base):
+        b = base[key]
+        c = cur.get(key)
+        if b["name"].endswith("/ERROR"):
+            notes.append(f"baseline row {key} is an ERROR row; skipped")
+            continue
+        if c is None:
+            failures.append(f"row disappeared: {key}")
+            continue
+        # latency drift
+        bu, cu = float(b.get("us_per_call", 0)), float(
+            c.get("us_per_call", 0))
+        if bu >= min_us and cu > 0:
+            ratio = cu / bu
+            tag = (f"{key}: us_per_call {bu:.1f} -> {cu:.1f} "
+                   f"({ratio:.2f}x)")
+            if ratio > 1.0 + latency_tol:
+                failures.append("latency regression: " + tag)
+            else:
+                notes.append(tag)
+        # throughput drift
+        bt, ct = _tps(b), _tps(c)
+        if bt and ct is not None:
+            tag = (f"{key}: tok_per_s {bt:.2f} -> {ct:.2f} "
+                   f"({ct / bt:.2f}x)")
+            if ct < bt * (1.0 - tps_tol):
+                failures.append("throughput regression: " + tag)
+            else:
+                notes.append(tag)
+        # correctness / structural contract fields
+        bf = parse_derived(b.get("derived", ""))
+        cf = parse_derived(c.get("derived", ""))
+        for k, v in bf.items():
+            if k.startswith("bit_exact") and v == "True" \
+                    and cf.get(k) == "False":
+                failures.append(f"contract flipped: {key}: {k} "
+                                f"True -> False")
+        if "decode_traces" in bf and "decode_traces" in cf:
+            if int(cf["decode_traces"]) > int(bf["decode_traces"]):
+                failures.append(
+                    f"retrace regression: {key}: decode_traces "
+                    f"{bf['decode_traces']} -> {cf['decode_traces']}")
+    for key in sorted(set(cur) - set(base)):
+        if cur[key]["name"].endswith("/ERROR"):
+            failures.append(f"current run errored: {key}: "
+                            f"{cur[key].get('derived', '')}")
+        else:
+            notes.append(f"new row (not in baseline, ok): {key}")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on perf/contract drift between two "
+                    "benchmarks.run --json documents")
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in reference document (results/...)")
+    ap.add_argument("--current", required=True,
+                    help="this run's document")
+    ap.add_argument("--latency-tol", type=float, default=1.0,
+                    help="allowed relative us_per_call growth "
+                         "(1.0 = 2x; CPU-proxy noise is large)")
+    ap.add_argument("--tps-tol", type=float, default=0.5,
+                    help="allowed relative tokens/s drop (0.5 = half)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip latency ratio checks below this baseline "
+                         "us_per_call (noise floor)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print per-row comparison notes")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    failures, notes = compare(base, cur, latency_tol=args.latency_tol,
+                              tps_tol=args.tps_tol, min_us=args.min_us)
+    if args.verbose:
+        for n in notes:
+            print(f"[regression] ok: {n}")
+    print(f"[regression] compared {len(base)} baseline rows vs "
+          f"{len(cur)} current rows "
+          f"(latency_tol={args.latency_tol}, tps_tol={args.tps_tol})")
+    for f in failures:
+        print(f"[regression] FAIL: {f}")
+    if failures:
+        print(f"[regression] {len(failures)} failure(s) — if this drift "
+              "is intentional, refresh results/bench_baseline.json (see "
+              "module docstring)")
+        return 1
+    print("[regression] no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

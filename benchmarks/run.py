@@ -2,13 +2,20 @@
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1,...]
                                             [--json PATH]
+                                            [--profile-dir DIR]
 
 Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary).
 ``--json PATH`` additionally writes the rows as a JSON document (the
-nightly CI job uploads it as a build artifact). Quality tables quantize
-the CPU-trained bench LM (results/bench_lm_ckpt, produced by
-examples/quickstart.py); kernel/roofline rows are derived from v5e
-constants + the dry-run artifacts, labeled as such.
+nightly CI job uploads it as a build artifact, and
+``benchmarks/regression.py`` gates two such documents against each
+other). Each module runs inside its OWN ``obs.Registry`` scope, so the
+per-module ``metrics`` snapshots in the JSON contain only that module's
+series — no bleed from modules that ran earlier in the sweep.
+``--profile-dir DIR`` wraps the sweep in a ``jax.profiler.trace``
+capture window. Quality tables quantize the CPU-trained bench LM
+(results/bench_lm_ckpt, produced by examples/quickstart.py);
+kernel/roofline rows are derived from v5e constants + the dry-run
+artifacts, labeled as such.
 """
 from __future__ import annotations
 
@@ -16,6 +23,8 @@ import argparse
 import json
 import sys
 import time
+
+from repro import obs
 
 from .common import Report
 
@@ -42,6 +51,9 @@ def main(argv=None) -> None:
                     help="comma-separated module subset")
     ap.add_argument("--json", default="",
                     help="also write results as JSON to this path")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the sweep into "
+                         "this directory")
     args = ap.parse_args(argv)
 
     mods = MODULES
@@ -53,20 +65,26 @@ def main(argv=None) -> None:
     report = Report()
     t0 = time.time()
     failures = []
-    for name in mods:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-        t1 = time.time()
-        try:
-            mod.run(report, fast=args.fast)
-        except Exception as e:  # noqa: BLE001 — record, keep sweeping
-            failures.append((name, repr(e)))
-            report.add(f"{name}/ERROR", 0.0, repr(e)[:120])
-        print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
+    # one fresh registry per module: module N's snapshot must not include
+    # modules 1..N-1's counts (the shared default registry accumulated
+    # across the whole sweep before)
+    module_metrics: dict[str, dict] = {}
+    with obs.trace_window(args.profile_dir or None):
+        for name in mods:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            t1 = time.time()
+            with obs.use_registry(obs.Registry()) as reg:
+                try:
+                    mod.run(report, fast=args.fast)
+                except Exception as e:  # noqa: BLE001 — record, sweep on
+                    failures.append((name, repr(e)))
+                    report.add(f"{name}/ERROR", 0.0, repr(e)[:120])
+            module_metrics[name] = reg.snapshot()
+            print(f"# {name} done in {time.time()-t1:.1f}s",
+                  file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s, {len(report.rows)} rows",
           file=sys.stderr)
     if args.json:
-        from repro import obs
-
         from .common import provenance
 
         prov = provenance()
@@ -79,10 +97,10 @@ def main(argv=None) -> None:
             "rows": [{"name": n, "us_per_call": u, "derived": d,
                       "provenance": prov}
                      for n, u, d in report.rows],
-            # registry snapshot: qgemm call counts, ragged m-tiles, engine
-            # tick/latency series, quantization health — everything the
-            # benchmarked code ticked while running
-            "metrics": obs.default_registry().snapshot(),
+            # per-module registry snapshots: qgemm call counts, ragged
+            # m-tiles, engine tick/latency series, quantization health —
+            # exactly what each module ticked, isolated per module
+            "metrics": module_metrics,
         }
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)

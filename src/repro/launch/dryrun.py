@@ -334,9 +334,11 @@ def main() -> None:
 
 
 def _telemetry_cell() -> None:
-    """Print the dry-run's registry snapshot: certificate verdicts and any
-    quantization-health counters ticked while lowering the serve cells
-    (everything here is eager/offline — the obs no-jit rule is moot)."""
+    """Print the dry-run's registry snapshot: certificate verdicts, any
+    quantization-health counters ticked while lowering the serve cells,
+    and p50/p95/p99 for any ``*_seconds`` histograms (e.g. ptq/lowering
+    spans) — everything here is eager/offline, the obs no-jit rule is
+    moot."""
     from repro import obs
 
     snap = obs.default_registry().snapshot()
@@ -349,6 +351,17 @@ def _telemetry_cell() -> None:
             cells.append(f"{name}={c[name]}")
     print("[dryrun] telemetry: " + ("; ".join(cells) if cells
                                     else "no counters ticked"))
+    for name, series in sorted(snap["histograms"].items()):
+        if not name.endswith("_seconds"):
+            continue
+        for sk, st in sorted(series.items()):
+            if not st["count"]:
+                continue
+            q = st["quantiles"]
+            print(f"[dryrun] {name}{{{sk}}}: n={st['count']} "
+                  f"p50={q['p50'] * 1e3:.2f}ms "
+                  f"p95={q['p95'] * 1e3:.2f}ms "
+                  f"p99={q['p99'] * 1e3:.2f}ms")
 
 
 if __name__ == "__main__":

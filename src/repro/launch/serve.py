@@ -7,12 +7,20 @@ batching engine over a stream of requests.
 ``--arch mixtral-8x7b`` swaps the trained bench_lm for a smoke-shaped
 registry architecture (random init) — the quantized-MoE ragged decode
 path. ``--metrics-out PATH`` writes the run's telemetry as JSONL: one
-event per line (admit / tick / retire / trace / ptq_run) with a trailing
-``{"snapshot": ...}`` line carrying every counter/gauge/histogram —
-per-tick decode latency, TTFT/TPOT, executed-vs-total ragged m-tiles,
-capped-alpha counts. A telemetry cell summarizing the same snapshot is
-always printed, and steady-state ``decode_traces == 1`` is asserted so
-instrumentation can never silently add a retrace.
+event per line (submit / admit / tick / retire / counters / trace /
+ptq_run) with a trailing ``{"snapshot": ...}`` line carrying every
+counter/gauge/histogram — per-tick decode latency (host and device),
+TTFT/TPOT with p50/p95/p99, executed-vs-total ragged m-tiles,
+capped-alpha counts. The telemetry outputs are flushed in a ``finally``
+block, so a tick that raises still leaves the event log + snapshot on
+disk (exactly when it is most needed). ``--trace-out PATH`` exports the
+same event log as a Perfetto/chrome://tracing timeline (engine-phase
+lane, per-request-slot lifecycle lanes, m-tile/qgemm counter tracks —
+open at https://ui.perfetto.dev). ``--profile-dir DIR`` additionally
+wraps the serving loop in a ``jax.profiler.trace`` capture window. A
+telemetry cell summarizing the snapshot is always printed, and
+steady-state ``decode_traces == 1`` is asserted so instrumentation can
+never silently add a retrace.
 """
 from __future__ import annotations
 
@@ -44,7 +52,14 @@ def _load_model(arch: str):
 
 def _fmt_hist(h: dict) -> str:
     n = h["count"]
-    return f"n={n} mean={h['sum'] / n * 1e3:.2f}ms" if n else "n=0"
+    if not n:
+        return "n=0"
+    out = f"n={n} mean={h['sum'] / n * 1e3:.2f}ms"
+    q = h.get("quantiles")
+    if q:
+        out += (f" p50={q['p50'] * 1e3:.2f}ms p95={q['p95'] * 1e3:.2f}ms"
+                f" p99={q['p99'] * 1e3:.2f}ms")
+    return out
 
 
 def _telemetry_cell(reg: obs.Registry) -> None:
@@ -62,6 +77,9 @@ def _telemetry_cell(reg: obs.Registry) -> None:
     phases = h.get("engine_phase_seconds", {})
     for sk in sorted(phases):
         print(f"[serve] phase {sk or '<all>'}: {_fmt_hist(phases[sk])}")
+    # device-time attribution: host phase span minus this = host overhead
+    for sk, st in sorted(h.get("engine_phase_device_seconds", {}).items()):
+        print(f"[serve] device {sk or '<all>'}: {_fmt_hist(st)}")
     for name in ("engine_ttft_seconds", "engine_tpot_seconds"):
         for sk, st in h.get(name, {}).items():
             print(f"[serve] {name}{('{' + sk + '}') if sk else ''}: "
@@ -113,6 +131,13 @@ def main() -> None:
     ap.add_argument("--metrics-out", default="",
                     help="write telemetry JSONL (events + final snapshot "
                          "line) to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/chrome://tracing timeline JSON "
+                         "of the run to this path (ui.perfetto.dev)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the serving "
+                         "loop into this directory (TensorBoard profile "
+                         "plugin format)")
     args = ap.parse_args()
 
     reg = obs.default_registry()
@@ -148,23 +173,36 @@ def main() -> None:
                                         batch_size=1))
     for i in range(args.requests):
         eng.submit(pipe.batch(300_000 + i)["tokens"][0].tolist())
-    t0 = time.time()
-    outs = eng.run()
-    dt = time.time() - t0
-    total = sum(len(v) for v in outs.values())
-    print(f"[serve] {len(outs)} requests, {total} tokens in {dt:.1f}s "
-          f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks)")
-    for rid in sorted(outs)[:4]:
-        print(f"[serve] r{rid}: {outs[rid][:16]}...")
+    # flush-on-failure: the event log + snapshot (and the timeline) are
+    # written even when a tick raises — the crashing run is the one whose
+    # telemetry matters most.
+    try:
+        with obs.trace_window(args.profile_dir or None):
+            t0 = time.time()
+            outs = eng.run()
+            dt = time.time() - t0
+        total = sum(len(v) for v in outs.values())
+        print(f"[serve] {len(outs)} requests, {total} tokens in {dt:.1f}s "
+              f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks)")
+        for rid in sorted(outs)[:4]:
+            print(f"[serve] r{rid}: {outs[rid][:16]}...")
 
-    # instrumentation must add zero retraces: row_counts stay traced
-    # operands, so steady-state decode compiles exactly once.
-    assert eng.decode_traces == 1, \
-        f"decode retraced {eng.decode_traces}x — telemetry broke jit"
-    _telemetry_cell(reg)
-    if args.metrics_out:
-        n = reg.write_events_jsonl(args.metrics_out)
-        print(f"[serve] wrote {n} telemetry lines -> {args.metrics_out}")
+        # instrumentation must add zero retraces: row_counts stay traced
+        # operands, so steady-state decode compiles exactly once.
+        assert eng.decode_traces == 1, \
+            f"decode retraced {eng.decode_traces}x — telemetry broke jit"
+    finally:
+        _telemetry_cell(reg)
+        if args.metrics_out:
+            n = reg.write_events_jsonl(args.metrics_out)
+            print(f"[serve] wrote {n} telemetry lines -> "
+                  f"{args.metrics_out}")
+        if args.trace_out:
+            n = obs.write_trace(args.trace_out, reg)
+            print(f"[serve] wrote {n} trace events -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
+        if args.profile_dir:
+            print(f"[serve] jax profiler capture -> {args.profile_dir}")
 
 
 if __name__ == "__main__":

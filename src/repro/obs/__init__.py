@@ -9,7 +9,28 @@ engine, the kernel dispatch wrappers, and the quantization pipeline:
   active registry via :func:`current_registry` (process default, scoped
   override via :func:`use_registry`).
 * :class:`Span` / :func:`span` — host-side wall-clock tick tracing that
-  lands in a histogram + the event log.
+  lands in a histogram + the event log (stamped with registry-clock
+  start times, so spans double as timeline slices).
+* :mod:`repro.obs.timeline` — Perfetto/chrome://tracing export of the
+  event log: engine-phase lane, per-request-slot lifecycle lanes
+  (queued -> prefill -> decode ticks -> retire, TTFT/TPOT markers), and
+  m-tile / qgemm counter tracks. ``launch/serve.py --trace-out t.json``
+  writes one; open it at https://ui.perfetto.dev ("Open trace file").
+* :mod:`repro.obs.profile` — device-time attribution:
+  :func:`~repro.obs.profile.device_timer` wraps jitted callables with
+  block_until_ready-bracketed, warmup-aware timing into
+  ``*_device_seconds`` histograms (so host overhead = host span minus
+  device time, per phase), and
+  :func:`~repro.obs.profile.trace_window` is the opt-in
+  ``jax.profiler.trace`` capture behind ``--profile-dir``.
+* :meth:`Histogram.quantile` / ``snapshot()["histograms"][...]
+  ["quantiles"]`` — p50/p95/p99 derived from the fixed cumulative
+  buckets (Prometheus ``histogram_quantile`` interpolation; overflow
+  clamps to the last finite edge), surfaced in the serve telemetry
+  cell, ``launch/dryrun.py``, and benchmark JSON.
+* ``benchmarks/regression.py`` (consumer, not part of this package)
+  turns two ``benchmarks.run --json`` documents into an enforced perf
+  contract — see its docstring for the baseline-refresh procedure.
 
 What is instrumented where
 --------------------------
@@ -60,12 +81,17 @@ conditionally when dashboards must see an explicit zero (e.g.
 ``alpha_cap_events_total``). 4. Name per Prometheus convention:
 ``*_total`` counters, ``*_seconds`` histograms, unit-suffixed gauges.
 """
+from . import profile, timeline
 from .metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge, Histogram,
                       Registry, current_registry, default_registry,
                       use_registry)
+from .profile import device_timer, trace_window
+from .timeline import build_trace, write_trace
 from .tracing import Span, span
 
 __all__ = [
     "DEFAULT_LATENCY_BUCKETS", "Counter", "Gauge", "Histogram", "Registry",
-    "Span", "current_registry", "default_registry", "span", "use_registry",
+    "Span", "build_trace", "current_registry", "default_registry",
+    "device_timer", "profile", "span", "timeline", "trace_window",
+    "use_registry", "write_trace",
 ]

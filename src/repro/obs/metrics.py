@@ -16,6 +16,7 @@ from __future__ import annotations
 import contextlib
 import json
 import threading
+import time
 
 #: Fixed wall-clock latency bucket edges (seconds). Chosen to straddle both
 #: interpret-mode CPU ticks (tens of ms .. s) and real-TPU ticks (sub-ms).
@@ -33,6 +34,17 @@ def _fmt(v: float) -> str:
     """Prometheus number formatting: integers without the trailing .0."""
     f = float(v)
     return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def _escape_label(v: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote, newline."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(v: str) -> str:
+    """Prometheus HELP text escaping: backslash and newline only."""
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 class _Metric:
@@ -55,11 +67,20 @@ class _Metric:
     def _series_name(self, key: tuple) -> str:
         return ",".join(f'{k}="{v}"' for k, v in zip(self.labelnames, key))
 
+    def _prom_series_name(self, key: tuple) -> str:
+        """Like :meth:`_series_name` but with label values escaped per the
+        Prometheus exposition format (snapshot keys stay raw)."""
+        return ",".join(f'{k}="{_escape_label(v)}"'
+                        for k, v in zip(self.labelnames, key))
+
+    def items(self) -> list[tuple[tuple, object]]:
+        """Sorted (label-key tuple, value) pairs."""
+        with self._lock:
+            return sorted(self._series.items())
+
     def series(self) -> dict[str, object]:
         """{'lbl="v",...': value} in sorted-series order ('' = unlabeled)."""
-        with self._lock:
-            items = sorted(self._series.items())
-        return {self._series_name(k): v for k, v in items}
+        return {self._series_name(k): v for k, v in self.items()}
 
 
 class Counter(_Metric):
@@ -146,19 +167,64 @@ class Histogram(_Metric):
         out["+Inf"] = acc + st["buckets"][-1]
         return out
 
+    def quantile(self, q: float, **labels) -> float:
+        """Estimate the q-quantile from the fixed cumulative buckets.
+
+        Prometheus ``histogram_quantile`` semantics: linear interpolation
+        inside the bucket holding the ``q * count``-th observation (lower
+        bound of the first bucket is 0 — these record non-negative
+        latencies). Observations in the ``+Inf`` overflow bucket clamp to
+        the highest finite edge (the honest answer without raw values).
+        NaN when the series is empty.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"{self.name}: quantile q={q} not in [0, 1]")
+        st = self.get(**labels)
+        return self._quantile_of(st, q)
+
+    def _quantile_of(self, st: dict, q: float) -> float:
+        if st["count"] == 0:
+            return float("nan")
+        target = q * st["count"]
+        cum, lo = 0, 0.0
+        for edge, n in zip(self.buckets, st["buckets"]):
+            if n and cum + n >= target:
+                return lo + (edge - lo) * (target - cum) / n
+            cum += n
+            lo = edge
+        return self.buckets[-1]  # overflow bucket: clamp to last edge
+
+    def quantiles(self, qs=(0.5, 0.95, 0.99), **labels) -> dict[str, float]:
+        """{'p50': v, 'p95': v, 'p99': v} (the snapshot convention)."""
+        st = self.get(**labels)
+        return {f"p{round(q * 100):d}": self._quantile_of(st, q)
+                for q in qs}
+
 
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
 
 
 class Registry:
-    """A namespace of metrics + an event log (the JSONL trace)."""
+    """A namespace of metrics + an event log (the JSONL trace).
 
-    def __init__(self):
+    ``clock`` is the monotonic time source used to stamp events (``ts``)
+    and to time spans/device timers — injectable so tests can drive a
+    deterministic fake clock through the whole telemetry pipeline
+    (``time.perf_counter`` by default; its origin is arbitrary, only
+    deltas and relative placement on the timeline are meaningful).
+    """
+
+    def __init__(self, clock=None):
         self._metrics: dict[str, _Metric] = {}
         self._events: list[dict] = []
         self._seq = 0
         self._dropped = 0
         self._lock = threading.Lock()
+        self._clock = clock if clock is not None else time.perf_counter
+
+    def now(self) -> float:
+        """Current reading of this registry's monotonic clock."""
+        return self._clock()
 
     # -- metric creation (get-or-create; shape must match) ------------------
     def _get(self, cls, name, help, labelnames, **kw) -> _Metric:
@@ -191,10 +257,13 @@ class Registry:
 
     # -- events (JSONL export) ---------------------------------------------
     def emit(self, event: dict) -> None:
-        """Append one event (a JSON-able dict; ``seq`` added here)."""
+        """Append one event (a JSON-able dict). ``seq`` is added here, and
+        ``ts`` (the registry clock reading) unless the caller already
+        stamped one — spans stamp their START time."""
+        ts = round(self.now(), 6)
         with self._lock:
             self._seq += 1
-            ev = {"seq": self._seq, **event}
+            ev = {"seq": self._seq, "ts": ts, **event}
             self._events.append(ev)
             if len(self._events) > MAX_EVENTS:
                 del self._events[: len(self._events) - MAX_EVENTS]
@@ -219,8 +288,8 @@ class Registry:
     # -- export -------------------------------------------------------------
     def snapshot(self) -> dict:
         """JSON-able view: {"counters": {name: {series: v}}, "gauges": ...,
-        "histograms": {name: {series: {"buckets": {le: n}, "sum", "count"}}},
-        "events_total": n}."""
+        "histograms": {name: {series: {"buckets": {le: n}, "sum", "count",
+        "quantiles": {"p50"/"p95"/"p99": v}}}}, "events_total": n}."""
         out = {"counters": {}, "gauges": {}, "histograms": {},
                "events_total": self._seq, "events_dropped": self._dropped}
         for name in sorted(self._metrics):
@@ -230,7 +299,13 @@ class Registry:
                     sk: {"buckets": dict(zip(map(_fmt, m.buckets),
                                              _cum(st["buckets"])))
                          | {"+Inf": sum(st["buckets"])},
-                         "sum": st["sum"], "count": st["count"]}
+                         "sum": st["sum"], "count": st["count"],
+                         "quantiles": {
+                             k: round(v, 9)
+                             for k, v in zip(
+                                 ("p50", "p95", "p99"),
+                                 (m._quantile_of(st, q)
+                                  for q in (0.5, 0.95, 0.99)))}}
                     for sk, st in m.series().items()}
             else:
                 out[m.kind + "s"][name] = dict(m.series())
@@ -242,10 +317,11 @@ class Registry:
         for name in sorted(self._metrics):
             m = self._metrics[name]
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {_escape_help(m.help)}")
             lines.append(f"# TYPE {name} {m.kind}")
             if isinstance(m, Histogram):
-                for sk, st in m.series().items():
+                for key, st in m.items():
+                    sk = m._prom_series_name(key)
                     pre = sk + "," if sk else ""
                     acc = 0
                     for edge, n in zip(m.buckets, st["buckets"]):
@@ -259,7 +335,8 @@ class Registry:
                     lines.append(f"{name}_sum{suffix} {_fmt(st['sum'])}")
                     lines.append(f"{name}_count{suffix} {st['count']}")
             else:
-                for sk, v in m.series().items():
+                for key, v in m.items():
+                    sk = m._prom_series_name(key)
                     suffix = f"{{{sk}}}" if sk else ""
                     lines.append(f"{name}{suffix} {_fmt(v)}")
         return "\n".join(lines) + ("\n" if lines else "")

@@ -3,12 +3,14 @@
 A :class:`Span` measures wall-clock around a host-side block (an engine
 tick phase, a benchmark section), observes the duration into a labeled
 histogram, and optionally emits one event into the registry's JSONL log.
-Spans are HOST constructs — never open one inside a jitted body (see the
-package docstring's "no metrics inside jitted bodies" rule).
+Time comes from the registry's monotonic clock (injectable for tests),
+and the emitted event is stamped with the span's START time (``ts``) plus
+its duration (``seconds``) — the pair :mod:`repro.obs.timeline` turns
+into Perfetto slices. Spans are HOST constructs — never open one inside a
+jitted body (see the package docstring's "no metrics inside jitted
+bodies" rule).
 """
 from __future__ import annotations
-
-import time
 
 from .metrics import DEFAULT_LATENCY_BUCKETS, Registry
 
@@ -36,17 +38,18 @@ class Span:
         self._t0 = 0.0
 
     def __enter__(self) -> "Span":
-        self._t0 = time.perf_counter()
+        self._t0 = self.registry.now()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        self.seconds = time.perf_counter() - self._t0
+        self.seconds = self.registry.now() - self._t0
         hist = self.registry.histogram(
             self.metric, self.help, tuple(sorted(self.labels)),
             buckets=self.buckets)
         hist.observe(self.seconds, **self.labels)
         if self.event is not None:
-            self.registry.emit({"ev": self.event, **self.labels,
+            self.registry.emit({"ev": self.event,
+                                "ts": round(self._t0, 6), **self.labels,
                                 "seconds": round(self.seconds, 6),
                                 **self.fields})
 

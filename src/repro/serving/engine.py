@@ -9,9 +9,17 @@ fine-grained quantized GEMMs when a recipe is attached.
 
 Telemetry (repro.obs): every tick emits admit/prefill/decode/retire spans
 into ``engine_phase_seconds{phase}`` plus a ``tick`` event carrying the
-decode latency, slot occupancy, and queue depth; per request the engine
-observes TTFT (submit -> first token) and TPOT (mean inter-token time)
-histograms and emits ``admit``/``retire`` events. Jit retraces bump
+decode latency, slot occupancy, queue depth, and the rid occupying each
+slot (``slot_rids`` — what places decode slices on per-request timeline
+lanes); per request the engine observes TTFT (submit -> first token) and
+TPOT (mean inter-token time) histograms and emits ``submit``/``admit``/
+``retire`` lifecycle events threaded with a per-request ``trace_id``
+(``eng<N>/r<rid>``). The jitted prefill/decode callables are wrapped in
+``obs.device_timer`` — block_until_ready-bracketed, first (compile) call
+excluded — populating ``engine_phase_device_seconds{phase}`` so host
+overhead vs device compute is separable per phase. After each tick a
+``counters`` event samples cumulative m-tile/qgemm counters for the
+timeline's counter tracks. Jit retraces bump
 ``engine_traces_total{fn}`` and emit a ``trace`` event (the per-engine
 ``prefill_traces``/``decode_traces`` properties keep their exact PR-2
 semantics — steady-state serving must hold decode at ONE trace, asserted
@@ -24,7 +32,7 @@ jitted bodies (see ``repro.obs``).
 from __future__ import annotations
 
 import dataclasses
-import time
+import itertools
 import weakref
 from typing import Any
 
@@ -70,8 +78,13 @@ class _Slot:
 
 
 class Engine:
+    # process-wide engine numbering: per-request trace ids ("eng3/r7")
+    # stay unique when several engines share one registry sequentially
+    _ids = itertools.count()
+
     def __init__(self, api: ModelApi, cfg: ModelConfig, params: Any,
                  serve_cfg: ServeConfig, recipe=None):
+        self.engine_id = f"eng{next(Engine._ids)}"
         self.api = api
         if serve_cfg.kernel_mode is not None:
             cfg = dataclasses.replace(cfg,
@@ -117,7 +130,14 @@ class Engine:
                 cache=cache1, pos=0)
             return logits, cache1
 
-        self._prefill = jax.jit(prefill_fn)
+        # device_timer wraps OUTSIDE jit (args pass through verbatim, so
+        # the jit cache — and the one-decode-trace invariant — is
+        # untouched); warmup=1 keeps the compile call out of the
+        # steady-state *_device_seconds series.
+        self._prefill = obs.device_timer(
+            jax.jit(prefill_fn), "engine_phase_device_seconds",
+            help="device time (block_until_ready) per engine phase",
+            phase="prefill")
 
         # jit'd batched decode with per-slot positions
         def decode_fn(params, tokens, cache, pos_vec):
@@ -127,7 +147,10 @@ class Engine:
                 cache=cache, pos=pos_vec)
             return logits[:, 0], cache
 
-        self._decode = jax.jit(decode_fn)
+        self._decode = obs.device_timer(
+            jax.jit(decode_fn), "engine_phase_device_seconds",
+            help="device time (block_until_ready) per engine phase",
+            phase="decode")
         self._cache1_specs = api.cache_specs(cfg, 1, serve_cfg.max_seq)
         # batch axis per cache leaf = position of "cache_batch" in the
         # spec's logical axes (scanned leaves lead with the LAYER axis)
@@ -196,24 +219,47 @@ class Engine:
         tiles.inc(executed, kind="executed")
         tiles.inc(total, kind="total")
 
+    def _sample_counters(self, reg) -> None:
+        """Emit one ``counters`` event per tick sampling the cumulative
+        m-tile / qgemm counters — the timeline's counter tracks. Host-side
+        at the tick boundary, after the routing drain."""
+        tiles = reg.counter("engine_moe_m_tiles_total", "", ("kind",))
+        calls = reg.counter(
+            "qgemm_calls_total",
+            "kernels.ops wrapper calls (trace-time under jit)",
+            ("scheme", "kind", "shape", "block"))
+        reg.emit({"ev": "counters", "tick": self._steps - 1,
+                  "moe_executed": tiles.get(kind="executed"),
+                  "moe_total": tiles.get(kind="total"),
+                  "qgemm_calls": calls.total()})
+
     def close(self) -> None:
         """Detach the routing sink (tests / explicit lifecycle). Safe to
         skip: the WeakMethod is pruned automatically once the engine dies."""
         moe.remove_routing_sink(self._routing_sink)
+
+    def trace_id(self, rid: int) -> str:
+        """The per-request trace/span id threaded through lifecycle
+        events (unique across engines within the process)."""
+        return f"{self.engine_id}/r{rid}"
 
     # -- public API ------------------------------------------------------------
     def submit(self, prompt: list[int]) -> int:
         rid = self._next_id
         self._next_id += 1
         self.queue.append((rid, list(prompt)))
-        self._submit_t[rid] = time.perf_counter()
+        self._submit_t[rid] = obs.current_registry().now()
+        obs.current_registry().emit(
+            {"ev": "submit", "rid": rid, "trace_id": self.trace_id(rid),
+             "prompt_len": len(prompt)})
         return rid
 
     def run(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
         reg = obs.current_registry()
         while (self.queue or any(s.active for s in self.slots)) \
                 and self._steps < max_ticks:
-            with obs.span(reg, "engine_phase_seconds", phase="admit"):
+            with obs.span(reg, "engine_phase_seconds", phase="admit",
+                          event="phase"):
                 self._admit()
             self._tick()
         return dict(self.outputs)
@@ -258,11 +304,12 @@ class Engine:
                     logits[:, true_len - 1], k,
                     temperature=self.sc.temperature,
                     top_k=self.sc.top_k))[0])
-                t_first = time.perf_counter()
+                t_first = reg.now()
                 self.slots[i] = _Slot(request_id=rid, length=true_len,
                                       generated=[first], active=True,
                                       t_first=t_first)
-                sp.fields.update(rid=rid, slot=i, prompt_len=true_len)
+                sp.fields.update(rid=rid, slot=i, prompt_len=true_len,
+                                 trace_id=self.trace_id(rid))
                 t_sub = self._submit_t.pop(rid, None)
                 if t_sub is not None:
                     ttft = t_first - t_sub
@@ -282,10 +329,12 @@ class Engine:
         last = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         active = 0
+        slot_rids = [-1] * B
         for i, s in enumerate(self.slots):
             if s.active:
                 last[i, 0] = s.generated[-1]
                 pos[i] = s.length
+                slot_rids[i] = s.request_id
                 active += 1
         with obs.span(reg, "engine_phase_seconds", phase="decode",
                       event="tick") as sp:
@@ -298,12 +347,15 @@ class Engine:
                                  top_k=self.sc.top_k)
             nxt = np.asarray(nxt)  # forces the step (+ its callbacks)
             sp.fields.update(tick=self._steps, slots_active=active,
-                             queue_depth=len(self.queue))
+                             queue_depth=len(self.queue),
+                             slot_rids=slot_rids)
         self._steps += 1
         reg.counter("engine_ticks_total", "").inc()
         reg.counter("engine_tokens_total", "").inc(active)
         self._drain_routing()
-        with obs.span(reg, "engine_phase_seconds", phase="retire"):
+        self._sample_counters(reg)
+        with obs.span(reg, "engine_phase_seconds", phase="retire",
+                      event="phase"):
             for i, s in enumerate(self.slots):
                 if not s.active:
                     continue
@@ -316,8 +368,7 @@ class Engine:
                 if done:
                     self.outputs[s.request_id] = list(s.generated)
                     n = len(s.generated)
-                    tpot = ((time.perf_counter() - s.t_first)
-                            / max(1, n - 1))
+                    tpot = (reg.now() - s.t_first) / max(1, n - 1)
                     reg.histogram(
                         "engine_tpot_seconds",
                         "mean inter-token latency per request").observe(
@@ -325,6 +376,8 @@ class Engine:
                     reg.counter("engine_requests_total", "",
                                 ("event",)).inc(event="retired")
                     reg.emit({"ev": "retire", "rid": s.request_id,
+                              "slot": i,
+                              "trace_id": self.trace_id(s.request_id),
                               "tokens": n, "tpot_s": round(tpot, 6)})
                     self.slots[i] = _Slot()
         reg.gauge("engine_slots_active",

@@ -40,6 +40,69 @@ class TestHistogram:
             reg.histogram("b", "", buckets=(1.0, 1.0))
 
 
+class TestQuantiles:
+    """Histogram.quantile(): Prometheus histogram_quantile semantics —
+    linear interpolation inside the bucket holding the q*count-th
+    observation, lower bound 0, overflow clamped to the last edge."""
+
+    def _hist(self):
+        reg = obs.Registry()
+        h = reg.histogram("q_seconds", "", buckets=(1.0, 2.0, 4.0))
+        return h
+
+    def test_in_bucket_interpolation(self):
+        h = self._hist()
+        for v in (0.5, 1.5, 1.5, 3.0):
+            h.observe(v)
+        # p50: target=2.0 obs; bucket (1,2] holds obs 2..3 -> interpolate
+        # 1 + (2-1) * (2-1)/2 = 1.5
+        assert h.quantile(0.5) == pytest.approx(1.5)
+        # p25 lands in the first bucket: interpolation starts from the
+        # lower bound 0 (not -inf); target == full bucket -> the edge
+        assert h.quantile(0.25) == pytest.approx(1.0)
+        assert h.quantile(0.0) == pytest.approx(0.0)
+        assert h.quantile(1.0) == pytest.approx(4.0)
+
+    def test_overflow_clamps_to_last_edge(self):
+        h = self._hist()
+        h.observe(100.0)
+        h.observe(200.0)
+        # both observations are beyond the last finite edge: the best the
+        # fixed buckets can say is ">= 4.0" -> clamp, never extrapolate
+        assert h.quantile(0.5) == pytest.approx(4.0)
+        assert h.quantile(0.99) == pytest.approx(4.0)
+
+    def test_empty_is_nan_and_bounds_checked(self):
+        import math
+        h = self._hist()
+        assert math.isnan(h.quantile(0.5))
+        h.observe(0.5)
+        with pytest.raises(ValueError):
+            h.quantile(-0.1)
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+
+    def test_labeled_series_independent(self):
+        reg = obs.Registry()
+        h = reg.histogram("q_seconds", "", ("phase",),
+                          buckets=(1.0, 2.0))
+        h.observe(0.5, phase="prefill")
+        h.observe(1.5, phase="decode")
+        assert h.quantile(0.5, phase="prefill") < 1.0
+        assert h.quantile(0.5, phase="decode") > 1.0
+        qs = h.quantiles(phase="decode")
+        assert set(qs) == {"p50", "p95", "p99"}
+
+    def test_snapshot_carries_quantiles(self):
+        reg = obs.Registry()
+        h = reg.histogram("lat_seconds", "", buckets=(1.0, 2.0))
+        for v in (0.5, 1.5, 3.0):
+            h.observe(v)
+        st = reg.snapshot()["histograms"]["lat_seconds"][""]
+        assert st["quantiles"]["p50"] == pytest.approx(1.5)
+        assert st["quantiles"]["p99"] == pytest.approx(2.0)
+
+
 class TestLabels:
     def test_series_isolation(self):
         reg = obs.Registry()
@@ -103,6 +166,38 @@ class TestPrometheusGolden:
         assert reg.prometheus_text() == golden
         # deterministic: a second render is byte-identical
         assert reg.prometheus_text() == golden
+
+
+class TestPrometheusConformance:
+    """Exposition-format conformance locked with a golden file:
+    ascending ``le`` ordering, an explicit ``+Inf`` bucket line,
+    ``_sum``/``_count`` emission, and label-value escaping of
+    backslash, double-quote, and newline."""
+
+    def test_conformance_golden_file(self):
+        import pathlib
+
+        reg = obs.Registry()
+        c = reg.counter("req_total", "requests served",
+                        ("route", "status"))
+        c.inc(3, route="decode", status="ok")
+        c.inc(route='we"ird\\path\nx', status="err")
+        reg.gauge("queue_depth", "pending requests\nsecond line").set(2)
+        h = reg.histogram("lat_seconds", "phase latency", ("phase",),
+                          buckets=(0.1, 1.0, 10.0))
+        h.observe(0.0625, phase="decode")
+        h.observe(0.5, phase="decode")
+        h.observe(99.0, phase="decode")
+        h.observe(0.25, phase="prefill")
+        golden = (pathlib.Path(__file__).parent / "golden"
+                  / "prometheus_conformance.txt").read_text()
+        assert reg.prometheus_text() == golden
+
+    def test_escaping_unit(self):
+        reg = obs.Registry()
+        reg.counter("c_total", "", ("p",)).inc(p='a\\b"c\nd')
+        line = reg.prometheus_text().splitlines()[-1]
+        assert line == 'c_total{p="a\\\\b\\"c\\nd"} 1'
 
 
 class TestRegistryStackAndEvents:
@@ -229,3 +324,15 @@ class TestEngineTelemetry:
                              for e in ticks)
         retired = {e["rid"] for e in evs if e.get("ev") == "retire"}
         assert retired == set(outs)
+
+    def test_timeline_lifecycle_exactly_once(self, run):
+        # interpret-mode quantized run: every admitted request's
+        # lifecycle events appear exactly once in the exported timeline
+        reg, eng, _, outs = run
+        names = [e["name"] for e in obs.build_trace(reg)["traceEvents"]]
+        for rid in outs:
+            for stage in ("queued", "prefill", "TTFT", "retire"):
+                assert names.count(f"r{rid} {stage}") == 1, \
+                    f"r{rid} {stage} not exactly-once"
+            assert names.count(f"r{rid} decode") == len(outs[rid]) - 1
+        assert names.count("prefill") == len(outs)  # engine-phase lane

@@ -1,0 +1,133 @@
+"""benchmarks/regression.py: the perf-contract gate over two
+``benchmarks.run --json`` documents."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks package lives at the repo root
+from benchmarks import regression  # noqa: E402
+
+
+def _doc(rows):
+    return {"modules": ["m"], "fast": True, "provenance": {},
+            "rows": rows, "metrics": {}}
+
+
+def _row(name, us, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+BASE_ROWS = [
+    _row("serving-moe/ragged-is", 5000.0,
+         "CPU-proxy;arch=mixtral-smoke;E=8;top_k=2;ticks=9;tokens=36;"
+         "tok_per_s=4.00;decode_traces=1;bit_exact_vs_reference=True"),
+    _row("kernel/dense", 900.0, "E=8;C=16;K=256;N=256"),
+    _row("kernel/tiny", 5.0, "E=1"),  # below the noise floor
+]
+
+
+@pytest.fixture
+def paths(tmp_path):
+    def write(name, rows):
+        p = tmp_path / name
+        p.write_text(json.dumps(_doc(rows)))
+        return str(p)
+    return write
+
+
+def _run(base_path, cur_path, *extra):
+    return regression.main(["--baseline", base_path, "--current",
+                            cur_path, *extra])
+
+
+class TestGate:
+    def test_identical_passes(self, paths):
+        b = paths("b.json", BASE_ROWS)
+        c = paths("c.json", BASE_ROWS)
+        assert _run(b, c) == 0
+
+    def test_synthetically_slowed_row_fails(self, paths):
+        slowed = json.loads(json.dumps(BASE_ROWS))
+        slowed[1]["us_per_call"] = 900.0 * 5  # 5x > default 2x tolerance
+        b = paths("b.json", BASE_ROWS)
+        c = paths("c.json", slowed)
+        assert _run(b, c) == 1
+
+    def test_throughput_drop_fails(self, paths):
+        slow = json.loads(json.dumps(BASE_ROWS))
+        slow[0]["derived"] = slow[0]["derived"].replace(
+            "tok_per_s=4.00", "tok_per_s=1.00")  # 4x drop
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", slow)) == 1
+
+    def test_within_tolerance_passes(self, paths):
+        near = json.loads(json.dumps(BASE_ROWS))
+        near[1]["us_per_call"] = 900.0 * 1.5  # < 2x
+        near[0]["derived"] = near[0]["derived"].replace(
+            "tok_per_s=4.00", "tok_per_s=3.00")  # 25% drop < 50%
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", near)) == 0
+
+    def test_noise_floor_row_ignored(self, paths):
+        jitter = json.loads(json.dumps(BASE_ROWS))
+        jitter[2]["us_per_call"] = 50.0  # 10x on a 5us row: scheduler noise
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", jitter)) == 0
+
+    def test_missing_row_fails(self, paths):
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", BASE_ROWS[:2])) == 1
+
+    def test_new_row_ok_but_error_row_fails(self, paths):
+        extra = BASE_ROWS + [_row("kernel/new-coverage", 100.0, "E=2")]
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", extra)) == 0
+        errored = BASE_ROWS + [_row("moe_e2e/ERROR", 0.0,
+                                    "RuntimeError('boom')")]
+        assert _run(paths("b2.json", BASE_ROWS),
+                    paths("c2.json", errored)) == 1
+
+    def test_bit_exact_flip_fails(self, paths):
+        flipped = json.loads(json.dumps(BASE_ROWS))
+        flipped[0]["derived"] = flipped[0]["derived"].replace(
+            "bit_exact_vs_reference=True", "bit_exact_vs_reference=False")
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", flipped)) == 1
+
+    def test_retrace_fails(self, paths):
+        retraced = json.loads(json.dumps(BASE_ROWS))
+        retraced[0]["derived"] = retraced[0]["derived"].replace(
+            "decode_traces=1", "decode_traces=3")
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", retraced)) == 1
+
+    def test_config_change_is_a_new_key(self, paths):
+        # identity fields (E=) participate in the key: a changed config is
+        # a disappeared baseline row, not a silent perf comparison
+        changed = json.loads(json.dumps(BASE_ROWS))
+        changed[1]["derived"] = "E=16;C=16;K=256;N=256"
+        assert _run(paths("b.json", BASE_ROWS),
+                    paths("c.json", changed)) == 1
+
+
+class TestParsing:
+    def test_parse_derived(self):
+        d = regression.parse_derived(
+            "CPU-proxy;E=8;tok_per_s=4.50;bit_exact_vs_dense=True")
+        assert d == {"E": "8", "tok_per_s": "4.50",
+                     "bit_exact_vs_dense": "True"}
+
+    def test_row_key_excludes_measurements(self):
+        a = _row("x/y", 1.0, "E=8;tok_per_s=4.00;ticks=9")
+        b = _row("x/y", 2.0, "E=8;tok_per_s=9.99;ticks=4")
+        assert regression.row_key(a) == regression.row_key(b)
+        c = _row("x/y", 1.0, "E=16;tok_per_s=4.00")
+        assert regression.row_key(a) != regression.row_key(c)
+
+    def test_duplicate_names_disambiguated(self, tmp_path):
+        p = tmp_path / "d.json"
+        p.write_text(json.dumps(_doc([_row("x/y", 1.0, "E=8"),
+                                      _row("x/y", 2.0, "E=8")])))
+        rows = regression.load_rows(str(p))
+        assert len(rows) == 2

@@ -1,0 +1,218 @@
+"""Timeline export: deterministic Perfetto golden with a fake clock,
+engine lifecycle exactly-once coverage, and device-timer attribution."""
+import json
+
+import pytest
+
+from repro import obs
+
+
+class FakeClock:
+    """Monotonically increasing stub: each reading advances by ``step``."""
+
+    def __init__(self, start: float = 100.0, step: float = 0.25):
+        self.t = start - step
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+class TestTimelineGolden:
+    """The exporter is a pure function of the event log; with an injected
+    fake clock the whole pipeline (span -> event -> traceEvents) is
+    byte-deterministic."""
+
+    def _registry(self) -> obs.Registry:
+        reg = obs.Registry(clock=FakeClock(start=100.0, step=0.25))
+        # submit at t=100.0 (emit consumes one reading)
+        reg.emit({"ev": "submit", "rid": 0, "trace_id": "eng0/r0",
+                  "prompt_len": 8})
+        # admit span: enter t=100.25, exit t=100.5 -> seconds=0.25; the
+        # emit inside __exit__ consumes t=100.75 but ts is the start
+        with obs.span(reg, "engine_phase_seconds", phase="prefill",
+                      event="admit") as sp:
+            sp.fields.update(rid=0, slot=1, prompt_len=8,
+                             trace_id="eng0/r0", ttft_s=0.5)
+        # decode tick span: enter t=101.0, exit t=101.25
+        with obs.span(reg, "engine_phase_seconds", phase="decode",
+                      event="tick") as sp:
+            sp.fields.update(tick=0, slots_active=1, queue_depth=0,
+                             slot_rids=[-1, 0])
+        # counters sample at t=101.75 (one reading for emit)
+        reg.emit({"ev": "counters", "tick": 0, "moe_executed": 10,
+                  "moe_total": 16, "qgemm_calls": 3})
+        # retire at t=102.0
+        reg.emit({"ev": "retire", "rid": 0, "slot": 1,
+                  "trace_id": "eng0/r0", "tokens": 2, "tpot_s": 0.25})
+        return reg
+
+    def test_golden_trace_events(self):
+        doc = obs.build_trace(self._registry())
+        assert doc["displayTimeUnit"] == "ms"
+        golden = [
+            {"ph": "M", "pid": 1, "name": "process_name",
+             "args": {"name": "engine"}},
+            {"ph": "M", "pid": 1, "tid": 0, "name": "thread_name",
+             "args": {"name": "phases"}},
+            {"ph": "M", "pid": 2, "name": "process_name",
+             "args": {"name": "requests"}},
+            # admit event -> engine-phase slice + request-lane slices
+            {"ph": "X", "pid": 1, "tid": 0, "name": "prefill",
+             "ts": 100.25e6, "dur": 0.25e6,
+             "args": {"rid": 0, "slot": 1, "prompt_len": 8}},
+            {"ph": "M", "pid": 2, "tid": 1, "name": "thread_name",
+             "args": {"name": "slot 1"}},
+            {"ph": "X", "pid": 2, "tid": 1, "name": "r0 queued",
+             "ts": 100.0e6, "dur": 0.25e6},
+            {"ph": "X", "pid": 2, "tid": 1, "name": "r0 prefill",
+             "ts": 100.25e6, "dur": 0.25e6,
+             "args": {"rid": 0, "prompt_len": 8, "trace_id": "eng0/r0"}},
+            {"ph": "i", "s": "t", "pid": 2, "tid": 1, "name": "r0 TTFT",
+             "ts": 100.5e6, "args": {"ttft_ms": 500.0}},
+            # tick event -> engine-phase slice + per-slot decode slice
+            {"ph": "X", "pid": 1, "tid": 0, "name": "decode",
+             "ts": 101.0e6, "dur": 0.25e6,
+             "args": {"tick": 0, "slots_active": 1, "queue_depth": 0}},
+            {"ph": "X", "pid": 2, "tid": 1, "name": "r0 decode",
+             "ts": 101.0e6, "dur": 0.25e6, "args": {"tick": 0}},
+            # counters event -> two counter tracks
+            {"ph": "C", "pid": 1, "name": "moe_m_tiles", "ts": 101.75e6,
+             "args": {"executed": 10, "total": 16}},
+            {"ph": "C", "pid": 1, "name": "qgemm_calls", "ts": 101.75e6,
+             "args": {"calls": 3}},
+            # retire event -> instant on the slot lane
+            {"ph": "i", "s": "t", "pid": 2, "tid": 1, "name": "r0 retire",
+             "ts": 102.0e6,
+             "args": {"tokens": 2, "tpot_ms": 250.0,
+                      "trace_id": "eng0/r0"}},
+        ]
+        assert doc["traceEvents"] == golden
+        # a second export is byte-identical (JSON level)
+        assert json.dumps(obs.build_trace(self._registry())) \
+            == json.dumps(doc)
+
+    def test_write_trace_roundtrip(self, tmp_path):
+        p = tmp_path / "trace.json"
+        n = obs.write_trace(str(p), self._registry())
+        doc = json.loads(p.read_text())
+        assert len(doc["traceEvents"]) == n > 0
+
+    def test_events_without_ts_skipped(self):
+        reg = obs.Registry()
+        # hand-built event that predates ts stamping
+        reg._events.append({"seq": 1, "ev": "tick", "phase": "decode"})
+        assert [e for e in obs.timeline.trace_events(reg.events())
+                if e["ph"] != "M"] == []
+
+
+class TestDeviceTimer:
+    def test_warmup_excluded_then_observed(self):
+        reg = obs.Registry(clock=FakeClock(start=0.0, step=0.5))
+        calls = []
+
+        def fn(x):
+            calls.append(x)
+            return x  # plain python value: block_until_ready is a no-op
+
+        timed = obs.device_timer(fn, "step_device_seconds", warmup=1,
+                                 phase="decode")
+        with obs.use_registry(reg):
+            assert timed(1) == 1 and timed(2) == 2 and timed(3) == 3
+        assert calls == [1, 2, 3] and timed.calls() == 3
+        snap = reg.snapshot()
+        h = snap["histograms"]["step_device_seconds"]['phase="decode"']
+        assert h["count"] == 2  # first (compile) call excluded
+        # fake clock: each timed call spans one 0.5s step
+        assert h["sum"] == pytest.approx(1.0)
+        warm = snap["counters"]["step_device_warmup_total"]
+        assert warm == {'phase="decode"': 1.0}
+
+    def test_metric_name_contract(self):
+        with pytest.raises(ValueError):
+            obs.device_timer(lambda: None, "step_seconds")
+
+    def test_trace_window_noop_when_unset(self):
+        with obs.trace_window(None) as d:
+            assert d is None
+        with obs.trace_window("") as d:
+            assert d is None
+
+
+class TestEngineTimeline:
+    """Interpret-free engine run (tiny dense model, reference kernels):
+    every admitted request's lifecycle events appear exactly once in the
+    exported timeline."""
+
+    @pytest.fixture(scope="class")
+    def run(self):
+        import jax
+        import numpy as np
+
+        from repro.models.config import ModelConfig
+        from repro.models.registry import get_model
+        from repro.nn import spec as S
+        from repro.serving.engine import Engine, ServeConfig
+
+        cfg = ModelConfig(name="t", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=64, dtype="float32",
+                          q_chunk=16, kv_chunk=16, remat=False)
+        api = get_model(cfg)
+        params = S.materialize(api.param_specs(cfg, None),
+                               jax.random.PRNGKey(0))
+        reg = obs.Registry()
+        with obs.use_registry(reg):
+            sc = ServeConfig(max_slots=2, max_seq=64, prefill_len=8,
+                             max_new_tokens=4)
+            eng = Engine(api, cfg, params, sc)
+            rng = np.random.default_rng(0)
+            rids = [eng.submit(rng.integers(0, 64, size=8).tolist())
+                    for _ in range(5)]  # > max_slots: staggered admission
+            outs = eng.run()
+            eng.close()
+        return reg, eng, rids, outs
+
+    def test_lifecycle_exactly_once(self, run):
+        reg, eng, rids, outs = run
+        assert set(outs) == set(rids)
+        te = obs.build_trace(reg)["traceEvents"]
+        names = [e["name"] for e in te]
+        for rid in rids:
+            assert names.count(f"r{rid} queued") == 1
+            assert names.count(f"r{rid} prefill") == 1
+            assert names.count(f"r{rid} TTFT") == 1
+            assert names.count(f"r{rid} retire") == 1
+            # a decode slice for every generated token after the first
+            assert names.count(f"r{rid} decode") == len(outs[rid]) - 1
+
+    def test_engine_phase_lane_and_counters(self, run):
+        reg, eng, _, _ = run
+        te = obs.build_trace(reg)["traceEvents"]
+        engine_slices = [e["name"] for e in te
+                         if e["ph"] == "X" and e["pid"] == 1]
+        assert {"admit", "prefill", "decode", "retire"} \
+            <= set(engine_slices)
+        assert engine_slices.count("decode") == eng.ticks
+        counters = [e for e in te if e["ph"] == "C"]
+        assert len(counters) == 2 * eng.ticks  # m-tiles + qgemm per tick
+        # slices are ordered and non-negative duration
+        for e in te:
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+
+    def test_trace_ids_and_device_series(self, run):
+        reg, eng, rids, _ = run
+        evs = reg.events()
+        admits = [e for e in evs if e.get("ev") == "admit"]
+        assert sorted(e["trace_id"] for e in admits) \
+            == sorted(eng.trace_id(r) for r in rids)
+        # device attribution: decode device series excludes the compile
+        # call, host series counts every tick
+        h = reg.snapshot()["histograms"]
+        dev = h["engine_phase_device_seconds"]['phase="decode"']
+        host = h["engine_phase_seconds"]['phase="decode"']
+        assert host["count"] == eng.ticks
+        assert dev["count"] == eng.ticks - 1
+        assert eng.decode_traces == 1  # timers added zero retraces
