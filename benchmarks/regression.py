@@ -19,6 +19,15 @@ matched pair the gate fails (exit 1) when:
   ``False``, or ``decode_traces`` grew (instrumentation added a
   retrace).
 
+Independent of row matching, the CURRENT document's metric snapshots
+(``metrics`` — per-module registry scopes from ``benchmarks.run``, or
+one standalone snapshot) are structurally checked: any nonzero
+``engine_request_outcomes_total{outcome="error"}`` and any violation of
+the request conservation law (``sum(outcomes) ==
+engine_requests_total{event="submitted"}``) are HARD failures — a
+serving benchmark that lost or double-retired requests measured
+something other than serving.
+
 Timing tolerances default WIDE (CPU interpret-mode proxies on shared CI
 runners are noisy; the contract flags order-of-magnitude cliffs and
 structural drift, not jitter). New current-only rows are reported but
@@ -144,6 +153,41 @@ def compare(base: dict[str, dict], cur: dict[str, dict], *,
     return failures, notes
 
 
+def metrics_failures(doc: dict) -> list[str]:
+    """Structural request-accounting checks over a document's metric
+    snapshot(s). Handles both shapes: ``benchmarks.run`` writes
+    ``{"metrics": {module: snapshot}}`` (one registry scope per module);
+    standalone module docs (``benchmarks.serving_moe --json``) write one
+    top-level snapshot (``{"metrics": {"counters": ...}}``)."""
+    failures: list[str] = []
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        return failures
+    scopes = {"": metrics} if "counters" in metrics else metrics
+    for scope, snap in sorted(scopes.items()):
+        if not isinstance(snap, dict):
+            continue
+        c = snap.get("counters", {})
+        where = f" [{scope}]" if scope else ""
+        outcomes = c.get("engine_request_outcomes_total", {})
+        err = outcomes.get('outcome="error"', 0)
+        if err:
+            failures.append(
+                f"engine error outcomes{where}: "
+                f'engine_request_outcomes_total{{outcome="error"}} = '
+                f"{int(err)}")
+        submitted = c.get("engine_requests_total", {}).get(
+            'event="submitted"')
+        if outcomes and submitted is not None:
+            total = sum(outcomes.values())
+            if total != submitted:
+                failures.append(
+                    f"request conservation violated{where}: "
+                    f"sum(outcomes) = {int(total)} != submitted = "
+                    f"{int(submitted)} (lost or double-retired requests)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail on perf/contract drift between two "
@@ -168,6 +212,8 @@ def main(argv=None) -> int:
     cur = load_rows(args.current)
     failures, notes = compare(base, cur, latency_tol=args.latency_tol,
                               tps_tol=args.tps_tol, min_us=args.min_us)
+    with open(args.current) as f:
+        failures += metrics_failures(json.load(f))
     if args.verbose:
         for n in notes:
             print(f"[regression] ok: {n}")

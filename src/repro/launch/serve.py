@@ -19,8 +19,18 @@ lane, per-request-slot lifecycle lanes, m-tile/qgemm counter tracks —
 open at https://ui.perfetto.dev). ``--profile-dir DIR`` additionally
 wraps the serving loop in a ``jax.profiler.trace`` capture window. A
 telemetry cell summarizing the snapshot is always printed, and
-steady-state ``decode_traces == 1`` is asserted so instrumentation can
-never silently add a retrace.
+steady-state ``decode_traces == 1 + fallbacks`` is asserted so
+instrumentation can never silently add a retrace (each circuit-breaker
+fallback re-establishes the jitted decode: exactly one intentional extra
+trace).
+
+Robustness knobs: ``--deadline-s`` / ``--max-queue`` /
+``--truncate-prompts`` / ``--breaker-threshold`` /
+``--fallback-kernel-mode`` map onto the ``ServeConfig`` lifecycle
+hardening, and ``--chaos-nan-ticks`` / ``--chaos-kernel-ticks`` arm the
+``repro.serving.chaos`` fault drill (nightly CI injects NaNs and asserts
+the ``nan`` outcome lands in the metrics artifact + as distinct
+``retire:nan`` Perfetto markers).
 """
 from __future__ import annotations
 
@@ -74,6 +84,23 @@ def _telemetry_cell(reg: obs.Registry) -> None:
           f"tokens={int(csum('engine_tokens_total'))} "
           f"requests={c.get('engine_requests_total', {})} "
           f"queue_depth={g.get('engine_queue_depth', {}).get('', 0)}")
+    # request outcomes + the conservation law (sums to submitted)
+    outcomes = c.get("engine_request_outcomes_total", {})
+    submitted = c.get("engine_requests_total", {}).get(
+        'event="submitted"', 0)
+    if outcomes:
+        conserved = sum(outcomes.values()) == submitted
+        pretty = {k: int(v) for k, v in sorted(outcomes.items())}
+        print(f"[serve] outcomes={pretty} submitted={int(submitted)} "
+              f"conserved={'yes' if conserved else 'NO'}")
+    if csum("engine_fallback_events_total"):
+        print(f"[serve] breaker fallbacks="
+              f"{c.get('engine_fallback_events_total', {})} "
+              f"kernel_failures="
+              f"{c.get('engine_kernel_failures_total', {})}")
+    if csum("engine_slow_ticks_total"):
+        print(f"[serve] slow_ticks="
+              f"{int(csum('engine_slow_ticks_total'))}")
     phases = h.get("engine_phase_seconds", {})
     for sk in sorted(phases):
         print(f"[serve] phase {sk or '<all>'}: {_fmt_hist(phases[sk])}")
@@ -128,6 +155,30 @@ def main() -> None:
     ap.add_argument("--kernel-mode", default="reference",
                     choices=["reference", "pallas", "pallas_interpret"],
                     help="qlinear backend inside prefill/decode")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "overruns retire with outcome=timeout")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission queue bound (0 = unbounded); surplus "
+                         "submits are rejected (backpressure)")
+    ap.add_argument("--truncate-prompts", action="store_true",
+                    help="opt into clipping over-length prompts to "
+                         "prefill-len instead of rejecting them")
+    ap.add_argument("--breaker-threshold", type=int, default=3,
+                    help="consecutive kernel failures / poisoned ticks "
+                         "that trip the fallback circuit breaker")
+    ap.add_argument("--fallback-kernel-mode", default="reference",
+                    choices=["reference", "pallas", "pallas_interpret",
+                             "none"],
+                    help="kernel mode the breaker degrades to "
+                         "('none' disables mode fallback)")
+    ap.add_argument("--chaos-nan-ticks", default="",
+                    help="comma-separated decode ticks at which to inject "
+                         "NaN logits into every active slot "
+                         "(repro.serving.chaos fault drill)")
+    ap.add_argument("--chaos-kernel-ticks", default="",
+                    help="comma-separated decode ticks at which to inject "
+                         "one kernel exception (breaker drill)")
     ap.add_argument("--metrics-out", default="",
                     help="write telemetry JSONL (events + final snapshot "
                          "line) to this path")
@@ -162,12 +213,32 @@ def main() -> None:
                                              calib)
         print(f"[serve] quantized ({spec.name}) in {time.time()-t0:.1f}s")
 
+    fb = args.fallback_kernel_mode
     sc = ServeConfig(max_slots=args.slots, max_seq=args.max_seq,
                      prefill_len=args.prefill_len,
                      max_new_tokens=args.max_new,
                      temperature=args.temperature,
-                     kernel_mode=args.kernel_mode)
+                     kernel_mode=args.kernel_mode,
+                     deadline_s=args.deadline_s,
+                     max_queue=args.max_queue,
+                     truncate_prompts=args.truncate_prompts,
+                     breaker_threshold=args.breaker_threshold,
+                     fallback_kernel_mode=None if fb == "none" else fb)
     eng = Engine(api, cfg, qparams, sc, recipe=recipe)
+    if args.chaos_nan_ticks or args.chaos_kernel_ticks:
+        from repro.serving import chaos
+
+        ccfg = chaos.ChaosConfig(
+            nan_logits=tuple(
+                chaos.NanFault(tick=int(t))
+                for t in args.chaos_nan_ticks.split(",") if t),
+            kernel_failures=tuple(
+                chaos.KernelFault(tick=int(t))
+                for t in args.chaos_kernel_ticks.split(",") if t))
+        monkey = chaos.ChaosMonkey(ccfg).install(eng)
+        print(f"[serve] chaos armed: nan_ticks="
+              f"[{args.chaos_nan_ticks}] kernel_ticks="
+              f"[{args.chaos_kernel_ticks}]")
     pipe = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size,
                                         seq_len=args.prefill_len,
                                         batch_size=1))
@@ -188,9 +259,12 @@ def main() -> None:
             print(f"[serve] r{rid}: {outs[rid][:16]}...")
 
         # instrumentation must add zero retraces: row_counts stay traced
-        # operands, so steady-state decode compiles exactly once.
-        assert eng.decode_traces == 1, \
-            f"decode retraced {eng.decode_traces}x — telemetry broke jit"
+        # operands, so steady-state decode compiles exactly once per
+        # established kernel route (each breaker fallback re-establishes
+        # the route = exactly one intentional extra trace)
+        assert eng.decode_traces == 1 + eng.fallbacks, \
+            (f"decode retraced {eng.decode_traces}x with "
+             f"{eng.fallbacks} fallbacks — telemetry broke jit")
     finally:
         _telemetry_cell(reg)
         if args.metrics_out:

@@ -39,7 +39,17 @@ What is instrumented where
   and queue-depth gauges, per-request TTFT/TPOT histograms, jit retrace
   events (``engine_traces_total``), and per-tick executed-vs-total MoE
   m-tile counters (``engine_moe_m_tiles_total``) fed by the routing sink
-  in ``models/moe.py``.
+  in ``models/moe.py``. Fault tolerance (PR 10):
+  ``engine_request_outcomes_total{outcome}`` counts every request's
+  terminal outcome (``ok|timeout|cancelled|rejected|nan|error``; all
+  series zero-seeded, so the conservation law — outcomes sum to
+  ``engine_requests_total{event="submitted"}`` once drained — is
+  checkable from any snapshot), ``engine_fallback_events_total{reason}``
+  counts circuit-breaker kernel-route fallbacks,
+  ``engine_kernel_failures_total{phase}`` counts exceptions escaping the
+  jitted paths, and ``engine_slow_ticks_total`` counts watchdog
+  stragglers. ``repro.serving.chaos`` injects all of the above
+  deterministically.
 * ``kernels/ops.py``: ``qgemm_calls_total{scheme,kind,shape,block}`` per
   wrapper call, plus host-side ragged executed/total m-tile accounting
   (``qgemm_ragged_m_tiles_total``) whenever ``row_counts`` is concrete.

@@ -13,7 +13,13 @@ into a ``traceEvents`` JSON document loadable in https://ui.perfetto.dev
   was live in (from the tick event's ``slot_rids``), a TTFT instant at
   the first generated token, and a retire instant carrying token count +
   TPOT. Slice names lead with the request's ``r<rid>`` so Perfetto's
-  search/aggregation groups a request across ticks.
+  search/aggregation groups a request across ticks. Non-``ok`` retires
+  render as DISTINCT markers (``r<rid> retire:nan`` / ``:timeout`` /
+  ``:cancelled`` / ``:error``); retires that never held a slot
+  (``rejected``, queued timeouts/cancels) land on the engine lane.
+  Fault-tolerance events show on the engine lane too:
+  ``kernel_failure:<phase>``, ``fallback:<reason>``, ``slow_tick``, and
+  ``engine abort:<reason>`` instants.
 * **counter tracks** (pid 1): ``moe_m_tiles`` (cumulative executed vs
   dense-total grouped-GEMM m-tiles from the live routing sink) and
   ``qgemm_calls`` (trace-time wrapper calls — flat in steady state, a
@@ -133,13 +139,25 @@ def trace_events(events: list[dict]) -> list[dict]:
 
         if kind == "retire":
             slot = ev.get("slot")
+            outcome = ev.get("outcome")
+            # error/timeout/nan/... retires get DISTINCT marker names so
+            # they're searchable in Perfetto apart from clean finishes
+            suffix = "" if outcome in (None, "ok") else f":{outcome}"
+            args = {"tokens": ev.get("tokens"),
+                    "tpot_ms": round(ev.get("tpot_s", 0.0) * 1e3, 3),
+                    "trace_id": ev.get("trace_id")}
+            if outcome is not None:
+                args["outcome"] = outcome
             if slot is not None:
                 name_slot(slot)
                 out.append(_instant(
-                    PID_REQUESTS, slot, f"r{ev['rid']} retire", us,
-                    {"tokens": ev.get("tokens"),
-                     "tpot_ms": round(ev.get("tpot_s", 0.0) * 1e3, 3),
-                     "trace_id": ev.get("trace_id")}))
+                    PID_REQUESTS, slot, f"r{ev['rid']} retire{suffix}",
+                    us, args))
+            elif suffix:
+                # rejected/cancelled/timed-out before ever holding a slot
+                out.append(_instant(
+                    PID_ENGINE, _ENGINE_TID,
+                    f"r{ev['rid']} retire{suffix}", us, args))
 
         if kind == "counters":
             out.append(_counter("moe_m_tiles", us,
@@ -152,6 +170,31 @@ def trace_events(events: list[dict]) -> list[dict]:
             out.append(_instant(PID_ENGINE, _ENGINE_TID,
                                 f"jit trace:{ev.get('fn', '?')}", us,
                                 {"count": ev.get("engine_count")}))
+
+        if kind == "fallback":
+            out.append(_instant(
+                PID_ENGINE, _ENGINE_TID,
+                f"fallback:{ev.get('reason', '?')}", us,
+                {"from": ev.get("from"), "to": ev.get("to"),
+                 "fallbacks": ev.get("fallbacks")}))
+
+        if kind == "kernel_failure":
+            out.append(_instant(
+                PID_ENGINE, _ENGINE_TID,
+                f"kernel_failure:{ev.get('phase', '?')}", us,
+                {"streak": ev.get("streak"), "error": ev.get("error")}))
+
+        if kind == "slow_tick":
+            out.append(_instant(
+                PID_ENGINE, _ENGINE_TID, "slow_tick", us,
+                {"tick": ev.get("tick"), "seconds": ev.get("seconds"),
+                 "median_s": ev.get("median_s")}))
+
+        if kind == "abort":
+            out.append(_instant(
+                PID_ENGINE, _ENGINE_TID,
+                f"engine abort:{ev.get('reason', '?')}", us,
+                {"error": ev.get("error")}))
     return out
 
 

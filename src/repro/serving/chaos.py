@@ -1,0 +1,163 @@
+"""Deterministic fault injection for the serving engine.
+
+Generalizes ``distributed.fault.FailureInjector`` to the serving tick
+loop: NaN logits, kernel-path exceptions, slow ticks, and queue floods
+fire at *configured ticks/rids* — no randomness — so the ``pytest -m
+chaos`` suite can assert exact outcomes (which slot retired ``nan``,
+how many decode retries, that co-batched streams stayed bit-exact).
+
+How to inject faults
+--------------------
+Build a :class:`ChaosConfig`, wrap it in a :class:`ChaosMonkey`, and
+install it on an engine BEFORE ``run()``::
+
+    from repro.serving.chaos import (ChaosConfig, ChaosMonkey,
+                                     KernelFault, NanFault, SlowTick)
+
+    monkey = ChaosMonkey(ChaosConfig(
+        nan_logits=(NanFault(tick=3, rid=1),),   # rid=None poisons all
+        kernel_failures=(KernelFault(tick=5, count=2),),
+        slow_ticks=(SlowTick(tick=7, seconds=2.0),),
+    ))
+    monkey.install(engine)          # via Engine.add_decode_wrapper
+    engine.run()
+    print(monkey.injected)          # log of every fault that fired
+
+The monkey wraps the jitted decode callable OUTSIDE jit (host python on
+concrete arrays), so installation cannot retrace — the one-decode-trace
+invariant holds under injection, and the wrapper survives circuit-breaker
+jit re-establishment (``Engine.add_decode_wrapper`` re-applies it).
+
+* :class:`NanFault` overwrites the decode logit rows of the targeted
+  active slots with a non-finite value AFTER the kernel ran — the KV
+  cache and every other row are untouched, which is exactly the
+  quarantine contract the chaos tests verify (co-batched requests
+  bit-exact vs a fault-free run).
+* :class:`KernelFault` raises from inside the decode call at a given
+  tick, ``count`` times — the engine does not advance the tick on
+  failure, so ``count`` expresses "fail the first N attempts" and the
+  breaker's retry/fallback path is exercised deterministically
+  (``count >= breaker_threshold`` forces a fallback or abort).
+* :class:`SlowTick` stalls the decode (``sleep_fn``; inject the fake
+  registry clock's ``advance`` for deterministic tests) inside the
+  watchdog window so straggler detection fires.
+* :func:`flood` is the queue-flood: submit ``n`` copies of a prompt at
+  once to exercise ``max_queue`` backpressure rejection.
+
+From the CLI, ``repro.launch.serve`` exposes ``--chaos-nan-ticks`` /
+``--chaos-kernel-ticks`` (nightly CI runs the injected-NaN drill and
+asserts the ``nan`` outcome + distinct trace markers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+import weakref
+from typing import Callable, Sequence
+
+from repro.distributed.fault import FailureInjector
+
+
+@dataclasses.dataclass(frozen=True)
+class NanFault:
+    """Poison decode logits at ``tick`` for ``rid`` (None = every active
+    slot) with ``value`` (any non-finite float)."""
+    tick: int
+    rid: int | None = None
+    value: float = math.nan
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFault:
+    """Raise from the decode path at ``tick``, for the first ``count``
+    attempts (the engine retries without advancing the tick)."""
+    tick: int
+    count: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowTick:
+    """Stall the decode at ``tick`` by ``seconds`` (watchdog straggler)."""
+    tick: int
+    seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    nan_logits: Sequence[NanFault] = ()
+    kernel_failures: Sequence[KernelFault] = ()
+    slow_ticks: Sequence[SlowTick] = ()
+
+
+class ChaosError(RuntimeError):
+    """The exception :class:`KernelFault` raises (distinguishable from
+    genuine kernel failures in logs/tests)."""
+
+
+class ChaosMonkey:
+    """Installs a :class:`ChaosConfig` onto an engine's decode path.
+
+    ``injected`` logs every fault that actually fired, in order —
+    ``{"kind": "nan"|"kernel"|"slow", "tick": ..., ...}`` — so tests can
+    assert the schedule was exercised (a chaos test whose faults never
+    fire is vacuous).
+    """
+
+    def __init__(self, cfg: ChaosConfig, *,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.cfg = cfg
+        self.injected: list[dict] = []
+        self._sleep = sleep_fn
+        self._failer = FailureInjector(
+            schedule={f.tick: f.count for f in cfg.kernel_failures},
+            exc_factory=lambda t: ChaosError(
+                f"chaos: injected kernel failure at tick {t}"))
+        self._slow_done: set[int] = set()
+        self._engine = None
+
+    def install(self, engine) -> "ChaosMonkey":
+        """Attach to ``engine`` via :meth:`Engine.add_decode_wrapper`
+        (held weakly; survives breaker jit re-establishment)."""
+        self._engine = weakref.ref(engine)
+        engine.add_decode_wrapper(self._wrap)
+        return self
+
+    # the fn -> fn decode wrapper (composed outside jit)
+    def _wrap(self, fn):
+        def chaotic_decode(params, tokens, cache, pos_vec):
+            eng = self._engine() if self._engine is not None else None
+            tick = eng.ticks if eng is not None else -1
+            try:
+                self._failer.maybe_fail(tick)
+            except ChaosError:
+                self.injected.append({"kind": "kernel", "tick": tick})
+                raise
+            for st in self.cfg.slow_ticks:
+                if st.tick == tick and tick not in self._slow_done:
+                    self._slow_done.add(tick)
+                    self.injected.append(
+                        {"kind": "slow", "tick": tick,
+                         "seconds": st.seconds})
+                    self._sleep(st.seconds)
+            logits, cache = fn(params, tokens, cache, pos_vec)
+            if eng is not None:
+                for nf in self.cfg.nan_logits:
+                    if nf.tick != tick:
+                        continue
+                    for i, s in enumerate(eng.slots):
+                        if s.active and (nf.rid is None
+                                         or s.request_id == nf.rid):
+                            logits = logits.at[i].set(nf.value)
+                            self.injected.append(
+                                {"kind": "nan", "tick": tick,
+                                 "rid": s.request_id, "slot": i})
+            return logits, cache
+        return chaotic_decode
+
+
+def flood(engine, n: int, prompt: Sequence[int] = (1, 2, 3)) -> list[int]:
+    """Queue-flood: submit ``n`` copies of ``prompt`` back-to-back.
+    Returns the rids (check ``engine.outcome(rid)`` — with
+    ``ServeConfig.max_queue`` set, the surplus is ``rejected``)."""
+    return [engine.submit(list(prompt)) for _ in range(n)]

@@ -301,8 +301,14 @@ class TestEngineTelemetry:
         assert c["engine_traces_total"] == {'fn="decode"': 1.0,
                                             'fn="prefill"': 1.0}
         assert c["engine_ticks_total"][""] == eng.ticks
-        assert c["engine_requests_total"] == {'event="admitted"': 3.0,
+        assert c["engine_requests_total"] == {'event="submitted"': 3.0,
+                                              'event="admitted"': 3.0,
                                               'event="retired"': 3.0}
+        # conservation: every submitted rid reached exactly one outcome
+        out = c["engine_request_outcomes_total"]
+        assert out['outcome="ok"'] == 3.0
+        assert sum(out.values()) == c["engine_requests_total"][
+            'event="submitted"']
         assert c["engine_tokens_total"][""] == sum(
             len(v) - 1 for v in outs.values())  # first token from prefill
         # per-request latency histograms: one observation per request

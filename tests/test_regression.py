@@ -9,9 +9,15 @@ sys.path.insert(0, ".")  # benchmarks package lives at the repo root
 from benchmarks import regression  # noqa: E402
 
 
-def _doc(rows):
+def _doc(rows, metrics=None):
     return {"modules": ["m"], "fast": True, "provenance": {},
-            "rows": rows, "metrics": {}}
+            "rows": rows, "metrics": metrics or {}}
+
+
+def _engine_counters(outcomes, submitted):
+    series = {f'outcome="{k}"': float(v) for k, v in outcomes.items()}
+    return {"engine_request_outcomes_total": series,
+            "engine_requests_total": {'event="submitted"': float(submitted)}}
 
 
 def _row(name, us, derived=""):
@@ -109,6 +115,53 @@ class TestGate:
         changed[1]["derived"] = "E=16;C=16;K=256;N=256"
         assert _run(paths("b.json", BASE_ROWS),
                     paths("c.json", changed)) == 1
+
+
+class TestMetricsStructure:
+    """Hard structural failures over the metric snapshots: nonzero error
+    outcomes and request-conservation violations (ISSUE 10)."""
+
+    def test_healthy_snapshot_passes(self, paths):
+        m = {"serving_moe": {
+            "counters": _engine_counters({"ok": 15, "error": 0}, 15)}}
+        assert regression.metrics_failures(_doc([], m)) == []
+
+    def test_error_outcome_fails(self, paths, tmp_path):
+        m = {"serving_moe": {
+            "counters": _engine_counters({"ok": 14, "error": 1}, 15)}}
+        fails = regression.metrics_failures(_doc([], m))
+        assert len(fails) == 1 and "error" in fails[0]
+        # and it gates through main(): same rows, poisoned metrics
+        b = tmp_path / "b.json"
+        c = tmp_path / "c.json"
+        b.write_text(json.dumps(_doc(BASE_ROWS)))
+        c.write_text(json.dumps(_doc(BASE_ROWS, m)))
+        assert _run(str(b), str(c)) == 1
+
+    def test_conservation_violation_fails(self):
+        # 15 submitted but only 14 accounted for: a lost request
+        m = {"serving_moe": {
+            "counters": _engine_counters({"ok": 14}, 15)}}
+        fails = regression.metrics_failures(_doc([], m))
+        assert len(fails) == 1 and "conservation" in fails[0]
+        # double retire (16 > 15) fails too
+        m2 = {"serving_moe": {
+            "counters": _engine_counters({"ok": 16}, 15)}}
+        assert len(regression.metrics_failures(_doc([], m2))) == 1
+
+    def test_standalone_snapshot_shape(self):
+        # benchmarks.serving_moe --json writes ONE top-level snapshot
+        doc = {"rows": [], "metrics": {
+            "counters": _engine_counters({"ok": 3, "error": 2}, 5)}}
+        fails = regression.metrics_failures(doc)
+        assert len(fails) == 1 and "error" in fails[0]
+
+    def test_non_engine_metrics_ignored(self):
+        doc = {"rows": [], "metrics": {
+            "kernels": {"counters": {"qgemm_calls_total": {"": 7.0}}},
+            "quant": None}}
+        assert regression.metrics_failures(doc) == []
+        assert regression.metrics_failures({"rows": []}) == []
 
 
 class TestParsing:

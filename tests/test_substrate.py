@@ -157,6 +157,54 @@ def test_heartbeat_straggler_detection():
     assert 99 in hb.straggler_steps
 
 
+def test_heartbeat_stop_without_start_raises():
+    """Regression: stop() without start() used to record a ~0s sample
+    (``self._t0 or time.monotonic()``) that dragged the straggler median
+    toward zero — it must refuse instead."""
+    hb = Heartbeat()
+    with pytest.raises(RuntimeError, match="without a matching start"):
+        hb.stop(0)
+    assert hb.times == []  # nothing recorded
+    # a matched pair still works, and stop() re-arms the guard
+    hb.start()
+    hb.stop(1)
+    assert len(hb.times) == 1
+    with pytest.raises(RuntimeError, match="without a matching start"):
+        hb.stop(2)
+    assert len(hb.times) == 1
+
+
+def test_heartbeat_injectable_clock():
+    """The serving watchdog drives Heartbeat off the registry clock."""
+    t = [0.0]
+    hb = Heartbeat(clock=lambda: t[0])
+    hb.start()
+    t[0] = 2.5
+    assert hb.stop(0) == 2.5
+
+
+def test_failure_injector_schedule():
+    """Generalized form: per-step failure counts + custom exceptions
+    (the serving chaos harness's substrate)."""
+    from repro.distributed.fault import FailureInjector
+
+    inj = FailureInjector(schedule={3: 2},
+                          exc_factory=lambda s: ValueError(f"boom {s}"))
+    inj.maybe_fail(0)
+    with pytest.raises(ValueError, match="boom 3"):
+        inj.maybe_fail(3)
+    with pytest.raises(ValueError, match="boom 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # count exhausted
+    assert inj.fired_at == [3, 3]
+    # legacy single-shot form unchanged
+    legacy = FailureInjector(fail_at_step=1)
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        legacy.maybe_fail(1)
+    legacy.maybe_fail(1)
+    assert legacy.fired
+
+
 # ---------------------------------------------------------------------------
 # Sharding rules
 # ---------------------------------------------------------------------------
